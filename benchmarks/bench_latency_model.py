@@ -1,0 +1,60 @@
+"""Paper Table I + Fig. 8 analogues.
+
+Fig. 8 (PE-count sweep): the TPU version sweeps the Pallas batch-block size
+(the 'number of PEs') and reports modeled latency + VMEM footprint — the
+same parallelism-vs-resources trade-off curve.
+
+Table I (energy efficiency): no power rail on CPU, so the comparable figure
+of merit is HBM bytes moved per batch (the quantity the paper's batch-level
+scheme reduces to win on power) for each scheme, plus modeled GOP/s from
+the latency model.
+"""
+
+from __future__ import annotations
+
+from repro.core import latency_model, scheduler
+
+
+def run(quiet: bool = False) -> dict:
+    # paper's accelerator workload: 104 b-values, 20k voxels, batch 64, N=4
+    batch, n, width, keep = 20_000, 4, 104, 52
+
+    sweep = latency_model.grid_sweep(batch=512, d_in=width, keep=keep,
+                                     d_out=width, n_samples=n)
+    flops = 2 * n * batch * (width * keep + keep * width)
+    rows = []
+    for schd, packed, batch_level, label in (
+            (scheduler.Schedule("sampling", chunk=64), False, False,
+             "sampling-level unpacked (conventional BayesNN)"),
+            (scheduler.Schedule("sampling", chunk=64), True, False,
+             "packed only (mask-zero skipping)"),
+            (scheduler.Schedule("batch"), True, True,
+             "packed + batch-level (paper's scheme)")):
+        tm = scheduler.traffic_model(schd, batch, n, width,
+                                     keep if packed else width, width)
+        lat = latency_model.masked_ffn_latency(
+            batch, n, width, width, keep, width, packed=packed,
+            batch_level=batch_level)
+        gops = flops / lat / 1e9
+        rows.append({"scheme": label, "latency_ms": lat * 1e3,
+                     "weight_mb": tm.weight_bytes / 1e6,
+                     "modeled_gop_s": gops})
+    if not quiet:
+        print("# Fig. 8 analogue: block-size (PE) sweep, modeled v5e")
+        print(f"{'block':>6s} {'latency_us':>11s} {'vmem_kb':>9s} {'fits':>5s}")
+        for r in sweep:
+            print(f"{r['block_batch']:6d} {r['latency_s']*1e6:11.1f} "
+                  f"{r['vmem_bytes']/1024:9.0f} {str(r['fits_vmem']):>5s}")
+        print("\n# Table I analogue: scheme comparison (20k voxels, N=4)")
+        for r in rows:
+            print(f"{r['latency_ms']:8.2f} ms  {r['weight_mb']:8.2f} MB "
+                  f"weights  {r['modeled_gop_s']:8.1f} GOP/s  {r['scheme']}")
+    return {"sweep": sweep, "schemes": rows}
+
+
+def main(argv=None) -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

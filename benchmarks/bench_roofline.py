@@ -1,0 +1,75 @@
+"""Roofline table: aggregates results/dryrun/*.json into the EXPERIMENTS.md
+§Roofline table (markdown) — all three terms per (arch x shape x mesh), the
+dominant bottleneck, MODEL_FLOPS ratio, and the what-would-move-it note."""
+
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = "results/dryrun"
+
+_MOVE_NOTES = {
+    "collective": ("shrink FSDP all-gathers (overlap with compute, 2D-shard "
+                   "or cache gathered layers) / cut attention partial "
+                   "all-reduces via head-TP"),
+    "memory": ("raise arithmetic intensity: bigger per-chip batch, fuse "
+               "elementwise chains, bf16 residuals end-to-end"),
+    "compute": "already MXU-bound: only kernel-level tiling wins remain",
+}
+
+
+def load(mesh: str) -> list[dict]:
+    d = os.path.join(RESULTS, mesh)
+    if not os.path.isdir(d):
+        return []
+    rows = []
+    for fn in sorted(os.listdir(d)):
+        with open(os.path.join(d, fn)) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def table(mesh: str = "single", quiet: bool = False) -> str:
+    rows = load(mesh)
+    lines = [
+        f"### Roofline — {mesh}-pod mesh "
+        f"({'256' if mesh == 'single' else '512'} chips, v5e constants)",
+        "",
+        "| cell | compute_s | memory_s | collective_s | dominant | "
+        "MODEL/HLO flops | roofline frac | next lever |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        name = f"{r.get('arch')}/{r.get('shape')}"
+        if "skipped" in r:
+            lines.append(f"| {name} | — | — | — | SKIP | — | — | "
+                         f"{r['skipped'][:70]} |")
+            continue
+        if "error" in r:
+            lines.append(f"| {name} | — | — | — | ERROR | — | — | "
+                         f"{r['error'][:60]!r} |")
+            continue
+        rf = r["roofline"]
+        ratio = rf.get("useful_flops_ratio")
+        frac = rf.get("roofline_fraction")
+        lines.append(
+            f"| {name} | {rf['compute_s']:.4f} | {rf['memory_s']:.4f} | "
+            f"{rf['collective_s']:.4f} | **{rf['dominant']}** | "
+            f"{ratio:.2f} | {frac * 100:.2f}% | "
+            f"{_MOVE_NOTES[rf['dominant']][:80]} |")
+    out = "\n".join(lines)
+    if not quiet:
+        print(out)
+    return out
+
+
+def main(argv=None) -> None:
+    for mesh in ("single", "multi"):
+        if load(mesh):
+            table(mesh)
+            print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Paper Table II + Fig. 5: sampling-level vs batch-level vs packed.
+
+Three observables:
+  1. measured CPU wall time of the three execution forms on the paper's
+     workload shape (104 b-values, 20k voxels on-chip / batch 64, N=4),
+  2. the analytic HBM-traffic model (weight bytes + arithmetic intensity)
+     — the quantity the batch-level scheme actually optimizes (the paper
+     reports it as power),
+  3. modeled v5e latency from core.latency_model (the Eq.-2 analogue),
+     giving the Table-II-style speedup our TPU mapping predicts.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import latency_model, masks as masks_lib, packing, scheduler
+from repro.ivim import model as ivim_model
+
+
+def _timeit(fn, *args, reps: int = 3) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run(batch: int = 2048, n_masks: int = 4, width: int = 104,
+        quiet: bool = False) -> dict:
+    cfg = ivim_model.IvimConfig(
+        b_values=tuple(float(i) for i in range(width)),
+        n_masks=n_masks, scale=2.0, use_batchnorm=False)
+    params, state = ivim_model.init(cfg, jax.random.PRNGKey(0))
+    x = jax.random.uniform(jax.random.PRNGKey(1), (batch, width))
+
+    # 1) unpacked, sampling-level (conventional BayesNN baseline)
+    def naive(x):
+        return ivim_model.apply_all_samples(cfg, params, state, x)
+
+    packed = ivim_model.pack_for_serving(cfg, params, state)
+
+    # 2) packed, batch-level (the paper's scheme)
+    def fast(x):
+        return ivim_model.packed_apply(cfg, packed, x)
+
+    t_naive = _timeit(jax.jit(naive), x)
+    t_fast = _timeit(jax.jit(fast), x)
+
+    keep = int(packed["w1p"].shape[-1])
+    tm_b = scheduler.traffic_model(scheduler.Schedule("batch"), batch,
+                                   n_masks, width, keep, width)
+    tm_s = scheduler.traffic_model(scheduler.Schedule("sampling", chunk=64),
+                                   batch, n_masks, width, keep, width)
+    lat_opt = latency_model.masked_ffn_latency(
+        batch, n_masks, width, width, keep, width, packed=True,
+        batch_level=True)
+    lat_base = latency_model.masked_ffn_latency(
+        batch, n_masks, width, width, keep, width, packed=False,
+        batch_level=False)
+
+    out = {
+        "cpu_wall_naive_ms": t_naive * 1e3,
+        "cpu_wall_packed_ms": t_fast * 1e3,
+        "cpu_speedup": t_naive / t_fast,
+        "weight_bytes_sampling": tm_s.weight_bytes,
+        "weight_bytes_batch": tm_b.weight_bytes,
+        "traffic_reduction": tm_s.weight_bytes / tm_b.weight_bytes,
+        "modeled_v5e_latency_base_us": lat_base * 1e6,
+        "modeled_v5e_latency_opt_us": lat_opt * 1e6,
+        "modeled_v5e_speedup": lat_base / lat_opt,
+    }
+    if not quiet:
+        print(f"# schedule A/B (batch={batch}, N={n_masks}, Nb={width}, "
+              f"keep={keep})")
+        print(f"CPU wall: naive {out['cpu_wall_naive_ms']:.2f} ms -> packed+"
+              f"batch-level {out['cpu_wall_packed_ms']:.2f} ms "
+              f"({out['cpu_speedup']:.2f}x)")
+        print(f"HBM weight bytes/batch: sampling-level "
+              f"{tm_s.weight_bytes/1e6:.2f} MB vs batch-level "
+              f"{tm_b.weight_bytes/1e6:.2f} MB "
+              f"({out['traffic_reduction']:.1f}x fewer — paper Fig. 5)")
+        print(f"modeled v5e: {out['modeled_v5e_latency_base_us']:.1f} us -> "
+              f"{out['modeled_v5e_latency_opt_us']:.1f} us "
+              f"({out['modeled_v5e_speedup']:.2f}x — paper Table II analogue)")
+    return out
+
+
+def main(argv=None) -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Benchmark aggregator — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Emits ``name,value,derived`` CSV lines (plus each benchmark's own report).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_algorithm, bench_kernels,
+                            bench_latency_model, bench_roofline,
+                            bench_schedule)
+
+    csv: list[tuple[str, float, str]] = []
+
+    print("=" * 72)
+    print("bench_algorithm — paper Figs. 6-7 (RMSE / uncertainty vs SNR)")
+    print("=" * 72)
+    t0 = time.perf_counter()
+    alg = bench_algorithm.run(steps=300)
+    csv.append(("fig6_7_requirements_satisfied", float(alg["satisfied"]),
+                "monotone RMSE+uncertainty in SNR"))
+
+    print()
+    print("=" * 72)
+    print("bench_schedule — paper Table II + Fig. 5 (batch-level scheme)")
+    print("=" * 72)
+    sch = bench_schedule.run()
+    csv.append(("tableII_cpu_speedup", sch["cpu_speedup"],
+                "packed+batch-level vs naive, CPU wall"))
+    csv.append(("fig5_weight_traffic_reduction", sch["traffic_reduction"],
+                "sampling-level / batch-level weight bytes"))
+    csv.append(("tableII_modeled_v5e_speedup", sch["modeled_v5e_speedup"],
+                "latency model, paper's workload"))
+
+    print()
+    print("=" * 72)
+    print("bench_latency_model — paper Table I + Fig. 8 (PE sweep / schemes)")
+    print("=" * 72)
+    lat = bench_latency_model.run()
+    base, mid, opt = lat["schemes"]
+    csv.append(("tableI_scheme_speedup",
+                base["latency_ms"] / opt["latency_ms"],
+                "packed+batch-level vs conventional, modeled"))
+
+    print()
+    print("=" * 72)
+    print("bench_kernels — Pallas kernels vs oracles + grid traffic")
+    print("=" * 72)
+    ker = bench_kernels.run()
+    csv.append(("kernel_masked_ffn_max_err", ker["masked_ffn_max_err"],
+                "allclose vs jnp oracle"))
+    csv.append(("kernel_weight_fetch_reduction",
+                ker["weight_fetches_sampling_level"]
+                / ker["weight_fetches_batch_level"],
+                "BlockSpec revisit counts"))
+
+    print()
+    print("=" * 72)
+    print("bench_roofline — dry-run roofline tables (see EXPERIMENTS.md)")
+    print("=" * 72)
+    bench_roofline.main()
+
+    print()
+    print("name,value,derived")
+    for name, value, derived in csv:
+        print(f"{name},{value:.6g},{derived}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,29 @@
+"""Fill cells missing from results/dryrun with the archived v1 sweep
+results, marked `probe_version: v1-scan-body-once` (their FLOP/byte terms
+under-count loop bodies — documented in EXPERIMENTS §Measurement-notes;
+memory + compile-proof fields are identical between versions)."""
+
+import json
+import os
+import shutil
+
+for mesh in ("single", "multi"):
+    src = f"results/dryrun_v1/{mesh}"
+    dst = f"results/dryrun/{mesh}"
+    if not os.path.isdir(src):
+        continue
+    os.makedirs(dst, exist_ok=True)
+    for fn in os.listdir(src):
+        dpath = os.path.join(dst, fn)
+        need = not os.path.exists(dpath)
+        if not need:
+            with open(dpath) as f:
+                need = "error" in json.load(f)
+        if need:
+            with open(os.path.join(src, fn)) as f:
+                r = json.load(f)
+            if "skipped" not in r and "error" not in r:
+                r["probe_version"] = "v1-scan-body-once"
+            with open(dpath, "w") as f:
+                json.dump(r, f, indent=2)
+            print("filled", mesh, fn)

@@ -1,0 +1,142 @@
+"""Analytic latency/resource model — the TPU analogue of paper Eq. (2).
+
+Paper (FPGA):  L_PU = R_M + R_A·(L+1) + ⌈N_b/N_PE⌉ − 1
+  — multiplier pipeline fill, adder-tree depth, serialization over input
+  chunks. Resources: DSP ∝ N_PE (Fig. 8).
+
+TPU (here): the same three ingredients map to
+  * pipeline fill  → MXU/VPU issue latency, amortized per tile: a matmul of
+    padded shape (M̂,K̂,N̂) takes max(compute, weight-stream, act-stream) plus a
+    fixed per-kernel fill term;
+  * adder tree     → the 128×128 systolic array contracts K in hardware; the
+    "tree depth" cost appears as padding waste when dims < 128;
+  * ⌈N_b/N_PE⌉      → grid serialization: ⌈M/bM⌉·⌈N/bN⌉·⌈K/bK⌉ tile steps.
+
+This model drives (a) schedule/packing selection in transform.plan_hardware,
+(b) the Fig.-8-style grid sweep benchmark, and (c) §Perf napkin math. It is a
+*model*: no wall-clock measurement happens on CPU; constants are the public
+v5e numbers used across EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+__all__ = ["TpuSpec", "V5E", "matmul_time", "masked_ffn_latency",
+           "RooflineTerms", "roofline_terms", "grid_sweep"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuSpec:
+    """Public per-chip numbers (TPU v5e)."""
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12      # FLOP/s
+    hbm_bw: float = 819e9                # B/s
+    ici_bw_per_link: float = 50e9        # B/s per link (~specified in prompt)
+    hbm_bytes: float = 16e9
+    vmem_bytes: float = 128 * 2 ** 20    # ~128 MiB VMEM
+    mxu: int = 128                       # systolic dim
+    kernel_fill_us: float = 2.0          # per-kernel launch/fill overhead
+
+
+V5E = TpuSpec()
+
+
+def _pad(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def matmul_time(m: int, k: int, n: int, spec: TpuSpec = V5E,
+                bytes_per_el: int = 2, weight_resident: bool = False) -> float:
+    """Roofline time (s) of one (m,k)@(k,n) matmul on one chip.
+
+    Padding to the MXU tile models the paper's adder-tree/PE-quantization
+    waste; ``weight_resident=True`` drops the weight-stream term (batch-level
+    scheme: weights already in VMEM).
+    """
+    mp, kp, np_ = _pad(m, 8), _pad(k, spec.mxu), _pad(n, spec.mxu)
+    t_compute = 2.0 * mp * kp * np_ / spec.peak_flops_bf16
+    w_bytes = 0 if weight_resident else kp * np_ * bytes_per_el
+    a_bytes = (mp * kp + mp * np_) * bytes_per_el
+    t_mem = (w_bytes + a_bytes) / spec.hbm_bw
+    return max(t_compute, t_mem) + spec.kernel_fill_us * 1e-6
+
+
+def masked_ffn_latency(batch: int, n_samples: int, d_in: int, hidden: int,
+                       keep: int, d_out: int, *, packed: bool,
+                       batch_level: bool, spec: TpuSpec = V5E,
+                       bytes_per_el: int = 2) -> float:
+    """Modeled latency (s) of one N-sample masked-FFN batch on one chip.
+
+    packed=False  → mask-as-multiply over the full hidden dim (no skipping).
+    batch_level=False → sampling-level order: weights re-streamed per voxel
+      chunk of 64 (the FPGA on-chip batch), modeled as non-resident weights
+      for every chunk; batch_level=True amortizes one weight load per sample.
+    """
+    h = keep if packed else hidden
+    chunk = 64
+    if batch_level:
+        t = 0.0
+        for _ in range(n_samples):
+            # one weight stream + full batch compute with resident weights
+            t += matmul_time(batch, d_in, h, spec, bytes_per_el)
+            t += matmul_time(batch, h, d_out, spec, bytes_per_el)
+        return t
+    t = 0.0
+    for _ in range(max(1, math.ceil(batch / chunk))):
+        for _ in range(n_samples):
+            t += matmul_time(chunk, d_in, h, spec, bytes_per_el)
+            t += matmul_time(chunk, h, d_out, spec, bytes_per_el)
+    return t
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    """The three §Roofline terms, in seconds (per step, per chip)."""
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)  # type: ignore[arg-type]
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def roofline_terms(flops_per_chip: float, hbm_bytes_per_chip: float,
+                   collective_bytes_per_chip: float,
+                   spec: TpuSpec = V5E) -> RooflineTerms:
+    """§Roofline: compute = FLOPs/peak, memory = bytes/HBM-bw,
+    collective = link bytes / per-link bw (per chip; cost_analysis and the
+    HLO collective parse are both per-device — calibrated in launch/dryrun)."""
+    return RooflineTerms(
+        compute_s=flops_per_chip / spec.peak_flops_bf16,
+        memory_s=hbm_bytes_per_chip / spec.hbm_bw,
+        collective_s=collective_bytes_per_chip / spec.ici_bw_per_link,
+    )
+
+
+def grid_sweep(batch: int, d_in: int, keep: int, d_out: int, n_samples: int,
+               spec: TpuSpec = V5E) -> list[dict]:
+    """Fig.-8 analogue: sweep the Pallas grid/block size (the TPU's 'number of
+    PEs') and report modeled latency + VMEM footprint per choice."""
+    out = []
+    for bm in (8, 16, 32, 64, 128, 256, 512):
+        if bm > max(8, batch):
+            break
+        tiles = math.ceil(batch / bm)
+        t = 0.0
+        for _ in range(n_samples):
+            t += matmul_time(bm, d_in, keep, spec) * tiles
+            t += matmul_time(bm, keep, d_out, spec, weight_resident=True) * tiles
+        vmem = (bm * _pad(d_in, 128) + _pad(d_in, 128) * _pad(keep, 128)
+                + _pad(keep, 128) * _pad(d_out, 128) + bm * _pad(keep, 128)) * 2
+        out.append({"block_batch": bm, "latency_s": t, "vmem_bytes": vmem,
+                    "fits_vmem": vmem <= spec.vmem_bytes})
+    return out

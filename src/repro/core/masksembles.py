@@ -1,0 +1,116 @@
+"""Masked (Masksembles) layers — the training-time form of the paper's BayesNN.
+
+Functional JAX modules: parameters are plain pytrees; masks ride along as
+constant arrays (never traced RNG). Two execution forms exist:
+
+* **training form** (this module): the batch is split into ``n_masks`` groups
+  and group ``i`` is multiplied by ``masks[i]`` after the activation — exactly
+  the Masksembles training procedure (an "enhanced dropout" with fixed drops).
+* **serving form** (:mod:`repro.core.packing` + :mod:`repro.core.scheduler`):
+  masks are folded into packed dense weights offline (mask-zero skipping) and
+  the ``n`` samples are scheduled batch-level; numerics identical, traffic
+  profile different. Equivalence is property-tested.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masks as masks_lib
+
+Params = dict[str, Any]
+
+__all__ = [
+    "dense_init",
+    "dense_apply",
+    "masked_dense_init",
+    "masked_dense_apply",
+    "masked_ffn_init",
+    "masked_ffn_apply",
+    "mask_ids_for_batch",
+    "repeat_for_samples",
+]
+
+
+def _he_init(key: jax.Array, d_in: int, d_out: int,
+             dtype: jnp.dtype) -> jax.Array:
+    scale = jnp.sqrt(2.0 / d_in).astype(jnp.float32)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def dense_init(key: jax.Array, d_in: int, d_out: int,
+               dtype: jnp.dtype = jnp.float32) -> Params:
+    return {
+        "w": _he_init(key, d_in, d_out, dtype),
+        "b": jnp.zeros((d_out,), dtype),
+    }
+
+
+def dense_apply(params: Params, x: jax.Array) -> jax.Array:
+    return x @ params["w"] + params["b"]
+
+
+def masked_dense_init(key: jax.Array, d_in: int, d_out: int,
+                      spec: masks_lib.MaskSpec,
+                      dtype: jnp.dtype = jnp.float32) -> Params:
+    """Dense layer whose *output* units are covered by Masksembles masks."""
+    if spec.width != d_out:
+        raise ValueError(f"mask width {spec.width} != d_out {d_out}")
+    p = dense_init(key, d_in, d_out, dtype)
+    p["masks"] = jnp.asarray(masks_lib.generate_masks(spec), dtype)
+    return p
+
+
+def mask_ids_for_batch(batch: int, n_masks: int) -> jax.Array:
+    """Masksembles batch-group assignment: example ``j`` uses mask
+    ``j * n // batch`` (contiguous groups, as in the reference impl)."""
+    return (jnp.arange(batch) * n_masks) // batch
+
+
+def masked_dense_apply(params: Params, x: jax.Array,
+                       mask_ids: jax.Array,
+                       activation: Callable[[jax.Array], jax.Array]
+                       | None = jax.nn.relu) -> jax.Array:
+    """y = act(x @ w + b) * masks[mask_ids].
+
+    For zero-preserving activations (ReLU/GELU/SiLU: f(0)=0) this equals
+    masking pre-activation, which is what packing exploits.
+    """
+    y = dense_apply(params, x)
+    if activation is not None:
+        y = activation(y)
+    return y * params["masks"][mask_ids]
+
+
+def masked_ffn_init(key: jax.Array, d_in: int, d_hidden: int, d_out: int,
+                    spec: masks_lib.MaskSpec,
+                    dtype: jnp.dtype = jnp.float32) -> Params:
+    """Two-layer FC block with a masked hidden dimension — the repeating unit
+    of uIVIM-NET (linear → BN(folded) → ReLU → mask → linear)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "fc1": masked_dense_init(k1, d_in, d_hidden, spec, dtype),
+        "fc2": dense_init(k2, d_hidden, d_out, dtype),
+    }
+
+
+def masked_ffn_apply(params: Params, x: jax.Array,
+                     mask_ids: jax.Array) -> jax.Array:
+    h = masked_dense_apply(params["fc1"], x, mask_ids)
+    return dense_apply(params["fc2"], h)
+
+
+def repeat_for_samples(x: jax.Array, n_masks: int) -> tuple[jax.Array, jax.Array]:
+    """Inference-time expansion: evaluate *every* input under *every* mask.
+
+    Returns (x_rep [n*B, ...], mask_ids [n*B]) — the naive (sampling-level,
+    unpacked) evaluation path; baseline for the scheduler/packing speedups.
+    """
+    b = x.shape[0]
+    x_rep = jnp.tile(x, (n_masks,) + (1,) * (x.ndim - 1))
+    ids = jnp.repeat(jnp.arange(n_masks), b)
+    return x_rep, ids

@@ -1,0 +1,117 @@
+"""Mask-zero skipping: fold fixed masks into packed dense weights (offline).
+
+FPGA version (paper §V-C): dropped weight positions are known offline, so only
+kept weights are stored in PU-local BRAM — no Bernoulli sampler, no Dropout
+module, fewer loads.
+
+TPU version (here): irregular zeros buy nothing on the MXU, but the masks are
+*structured* — every mask keeps exactly K of H hidden units (masks.py I2). So
+"skip the zeros" becomes "gather the K kept columns/rows into smaller dense
+matrices", one set per mask-sample:
+
+    w1 [D, H], masks [N, H]  →  w1p [N, D, K]     (+ b1p [N, K])
+    w2 [H, D2]               →  w2p [N, K, D2]
+
+and the masked FFN  relu(x @ w1 + b1) * mask  @ w2  becomes, exactly,
+``relu(x @ w1p[i] + b1p[i]) @ w2p[i]`` — FLOPs and weight bytes both shrink by
+K/H. Exactness relies on zero-preserving activations (relu(0)=0) and on the
+mask being a {0,1} scale: relu(z)·m == relu(z·m), and hidden units that are
+zero contribute nothing through w2.
+
+All functions are pure and run at model-build time (host), so the packed
+weights are ordinary pytree leaves — the serving graph contains no masking at
+all.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict[str, Any]
+
+__all__ = [
+    "kept_indices",
+    "pack_out_dim",
+    "pack_in_dim",
+    "pack_masked_ffn",
+    "pack_gated_ffn",
+    "packed_ffn_apply",
+    "packed_gated_ffn_apply",
+]
+
+
+def kept_indices(masks: np.ndarray | jax.Array) -> np.ndarray:
+    """[N, K] indices of kept units per mask. Requires uniform K (I2)."""
+    masks = np.asarray(masks).astype(bool)
+    counts = masks.sum(axis=1)
+    if not (counts == counts[0]).all():
+        raise ValueError(f"non-uniform keep counts {counts}; packing requires "
+                         "rectangular masks (masks.py normalizes to K)")
+    n, _ = masks.shape
+    return np.stack([np.flatnonzero(masks[i]) for i in range(n)], axis=0)
+
+
+def pack_out_dim(w: jax.Array, idx: np.ndarray) -> jax.Array:
+    """w [..., H] + idx [N, K] → [N, ..., K] (gather kept output units)."""
+    return jnp.stack([jnp.take(w, idx[i], axis=-1) for i in range(idx.shape[0])])
+
+
+def pack_in_dim(w: jax.Array, idx: np.ndarray) -> jax.Array:
+    """w [H, ...] + idx [N, K] → [N, K, ...] (gather kept input units)."""
+    return jnp.stack([jnp.take(w, idx[i], axis=0) for i in range(idx.shape[0])])
+
+
+def pack_masked_ffn(w1: jax.Array, b1: jax.Array, w2: jax.Array,
+                    b2: jax.Array, masks: np.ndarray | jax.Array) -> Params:
+    """Pack a relu-FFN with masked hidden dim. Returns the serving pytree."""
+    idx = kept_indices(masks)
+    return {
+        "w1p": pack_out_dim(w1, idx),       # [N, D, K]
+        "b1p": pack_out_dim(b1, idx),       # [N, K]
+        "w2p": pack_in_dim(w2, idx),        # [N, K, D2]
+        "b2": b2,                           # [D2] shared across samples
+        "kept_idx": jnp.asarray(idx),       # bookkeeping / unpacking
+    }
+
+
+def pack_gated_ffn(w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array,
+                   masks: np.ndarray | jax.Array) -> Params:
+    """Pack a SwiGLU-style gated FFN (LM archs): mask covers the hidden dim of
+    both gate and up projections; silu(0)*0 == 0 keeps exactness."""
+    idx = kept_indices(masks)
+    return {
+        "wgp": pack_out_dim(w_gate, idx),   # [N, D, K]
+        "wup": pack_out_dim(w_up, idx),     # [N, D, K]
+        "wdp": pack_in_dim(w_down, idx),    # [N, K, D]
+        "kept_idx": jnp.asarray(idx),
+    }
+
+
+def packed_ffn_apply(packed: Params, x: jax.Array,
+                     sample: int | jax.Array | None = None) -> jax.Array:
+    """Apply the packed FFN.
+
+    sample=None → all samples: returns [N, B, D2] via an einsum whose
+    contraction order is sample-major (weights stationary per sample — the
+    batch-level scheme; see scheduler.py for the explicit loop forms).
+    sample=i → single sample: returns [B, D2].
+    """
+    if sample is None:
+        h = jax.nn.relu(jnp.einsum("bd,ndk->nbk", x, packed["w1p"])
+                        + packed["b1p"][:, None, :])
+        return jnp.einsum("nbk,nkm->nbm", h, packed["w2p"]) + packed["b2"]
+    w1 = packed["w1p"][sample]
+    h = jax.nn.relu(x @ w1 + packed["b1p"][sample])
+    return h @ packed["w2p"][sample] + packed["b2"]
+
+
+def packed_gated_ffn_apply(packed: Params, x: jax.Array) -> jax.Array:
+    """All-sample packed SwiGLU: x [..., D] → [N, ..., D]."""
+    g = jnp.einsum("...d,ndk->n...k", x, packed["wgp"])
+    u = jnp.einsum("...d,ndk->n...k", x, packed["wup"])
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("n...k,nkd->n...d", h, packed["wdp"])

@@ -1,0 +1,135 @@
+"""Sample scheduling: sampling-level vs batch-level (paper Fig. 5).
+
+A mask-based BayesNN evaluates every input under N mask-samples. Two loop
+orders compute identical results with very different weight-traffic:
+
+* **sampling-level** (baseline in the paper): voxel-outer, sample-inner —
+  each voxel chunk re-reads all N weight sets → ``N × ceil(B/chunk)`` weight
+  loads per batch.
+* **batch-level** (paper's scheme): sample-outer, batch-inner — each weight
+  set is read once per batch → ``N`` weight loads.
+
+On the FPGA the win is power (fewer BRAM/DDR loads). On TPU the same reorder
+is an *arithmetic intensity* win: weight tiles stay VMEM-resident across the
+whole batch, so HBM weight bytes drop by ``ceil(B/chunk)``×. The Pallas kernel
+(kernels/masked_ffn.py) hard-codes the batch-level grid order; the jnp forms
+here give reference semantics, CPU timings, and the traffic model used by
+benchmarks and the §Perf napkin math.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+ApplyFn = Callable[[Params, jax.Array, int | jax.Array], jax.Array]
+
+__all__ = [
+    "Schedule",
+    "run_sampling_level",
+    "run_batch_level",
+    "run",
+    "weight_load_counts",
+    "TrafficModel",
+    "traffic_model",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Execution schedule for N-sample inference.
+
+    kind: 'sampling' (voxel-outer) or 'batch' (sample-outer, paper's scheme).
+    chunk: voxel-chunk size for the sampling-level loop (the FPGA processes
+      voxels in on-chip batches; chunk mirrors that granularity).
+    """
+    kind: str = "batch"
+    chunk: int = 64
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("sampling", "batch"):
+            raise ValueError(f"unknown schedule kind {self.kind!r}")
+
+
+def run_batch_level(apply_fn: ApplyFn, params: Params, x: jax.Array,
+                    n_samples: int) -> jax.Array:
+    """Sample-outer scan: weights for sample i are touched exactly once while
+    the full batch streams through. Returns [N, B, ...]."""
+
+    def body(_, i):
+        return None, apply_fn(params, x, i)
+
+    _, ys = jax.lax.scan(body, None, jnp.arange(n_samples))
+    return ys
+
+
+def run_sampling_level(apply_fn: ApplyFn, params: Params, x: jax.Array,
+                       n_samples: int, chunk: int = 64) -> jax.Array:
+    """Voxel-outer scan with an inner unrolled sample loop: mimics the FPGA
+    baseline where every voxel chunk re-loads all N weight sets.
+    Returns [N, B, ...] (identical values to run_batch_level)."""
+    b = x.shape[0]
+    if b % chunk != 0:
+        pad = chunk - b % chunk
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+    xc = x.reshape(-1, chunk, *x.shape[1:])
+
+    def body(_, xb):
+        ys = jnp.stack([apply_fn(params, xb, i) for i in range(n_samples)])
+        return None, ys  # [N, chunk, ...]
+
+    _, ys = jax.lax.scan(body, None, xc)           # [B/chunk, N, chunk, ...]
+    ys = jnp.moveaxis(ys, 1, 0).reshape(n_samples, -1, *ys.shape[3:])
+    return ys[:, :b]
+
+
+def run(schedule: Schedule, apply_fn: ApplyFn, params: Params, x: jax.Array,
+        n_samples: int) -> jax.Array:
+    if schedule.kind == "batch":
+        return run_batch_level(apply_fn, params, x, n_samples)
+    return run_sampling_level(apply_fn, params, x, n_samples, schedule.chunk)
+
+
+def weight_load_counts(schedule: Schedule, batch: int, n_samples: int) -> int:
+    """Paper §V-D: sampling-level = N × ceil(B/chunk) loads, batch-level = N."""
+    if schedule.kind == "batch":
+        return n_samples
+    return n_samples * -(-batch // schedule.chunk)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficModel:
+    """HBM traffic + FLOPs of one N-sample masked-FFN evaluation."""
+    weight_bytes: int          # total weight bytes moved from HBM
+    act_bytes: int             # activation bytes (in + out, once)
+    flops: int                 # dense MACs*2 over packed shapes
+    weight_loads: int          # paper's load-count metric
+
+    @property
+    def total_bytes(self) -> int:
+        return self.weight_bytes + self.act_bytes
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(1, self.total_bytes)
+
+
+def traffic_model(schedule: Schedule, batch: int, n_samples: int,
+                  d_in: int, k_hidden: int, d_out: int,
+                  bytes_per_el: int = 2) -> TrafficModel:
+    """Analytic traffic for a packed 2-layer FFN under a schedule.
+
+    The per-sample packed weight set is w1p [d_in,K] + w2p [K,d_out]; the
+    schedule determines how many times it crosses HBM→VMEM.
+    """
+    per_sample_w = (d_in * k_hidden + k_hidden * d_out + k_hidden + d_out)
+    loads = weight_load_counts(schedule, batch, n_samples)
+    weight_bytes = per_sample_w * bytes_per_el * (loads // n_samples) * n_samples
+    act_bytes = (batch * d_in + n_samples * batch * d_out) * bytes_per_el
+    flops = 2 * n_samples * batch * (d_in * k_hidden + k_hidden * d_out)
+    return TrafficModel(weight_bytes=weight_bytes, act_bytes=act_bytes,
+                        flops=flops, weight_loads=loads)

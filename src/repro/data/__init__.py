@@ -1,0 +1,1 @@
+from repro.data.pipeline import LMDataConfig, lm_batch, batch_specs  # noqa: F401

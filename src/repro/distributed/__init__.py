@@ -1,0 +1,17 @@
+"""Distribution layer: sharding rules, fault tolerance, and the
+distributed-optimization toolkit for 1000+-node posture.
+
+sharding.py    — leaf-path -> PartitionSpec rules (FSDP over "data", TP over
+                 "model", EP for experts, sequence-sharded KV caches).
+checkpoint.py  — atomic manifest checkpoints; restore *reshards* onto a
+                 different mesh (elastic restart path).
+compression.py — int8 error-feedback gradient compression for the cross-pod
+                 all-reduce.
+elastic.py     — remesh planner: device loss -> nearest valid submesh.
+pipeline.py    — GPipe-style pipeline stage runner (shard_map +
+                 collective_permute) for depth-wise scaling past one pod.
+straggler.py   — step-time outlier detection + mitigation policy.
+"""
+
+from repro.distributed import (  # noqa: F401
+    checkpoint, compression, elastic, pipeline, sharding, straggler)

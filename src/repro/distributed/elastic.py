@@ -1,0 +1,92 @@
+"""Elastic remesh planning: node loss -> nearest valid submesh -> reshard.
+
+At 1000+-node scale, node failure is routine. The recovery path here is:
+  1. straggler/health monitor marks hosts dead (straggler.py),
+  2. ``plan_remesh`` picks the largest valid mesh on the surviving chips,
+  3. the trainer rebuilds the mesh, recomputes shardings (sharding.py), and
+     restores the latest checkpoint with resharding (checkpoint.py) — global
+     batch is preserved by raising grad-accumulation steps so optimizer
+     dynamics are unchanged across the remesh.
+
+The planner is pure logic (tested heavily); it favors keeping the "model"
+axis intact (TP groups must stay within fast ICI domains) and shrinking
+"data"/"pod" first (DP shrink only costs throughput, TP shrink changes the
+layout of every weight).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["RemeshPlan", "plan_remesh", "grad_accum_for_batch"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    old_shape: dict[str, int]
+    new_shape: dict[str, int]
+    n_alive: int
+    dropped_chips: int              # alive chips intentionally left idle
+    reshard_required: bool          # param layout changes (model axis moved)
+    note: str = ""
+
+    @property
+    def new_size(self) -> int:
+        out = 1
+        for v in self.new_shape.values():
+            out *= v
+        return out
+
+
+def plan_remesh(old_shape: dict[str, int], n_alive: int) -> RemeshPlan:
+    """Largest valid mesh on ``n_alive`` chips, preferring to preserve the
+    "model" axis, then "data" (powers of two), then "pod"."""
+    model = old_shape.get("model", 1)
+    pod = old_shape.get("pod", 1)
+    best = None
+    for m in _divisor_chain(model):
+        for p in range(pod, 0, -1):
+            data = _largest_pow2(n_alive // (m * p))
+            if data < 1:
+                continue
+            size = m * p * data
+            cand = (size, m == model, p, (m, p, data))
+            if best is None or cand > best:
+                best = cand
+    assert best is not None
+    m, p, data = best[3]
+    new_shape = {k: v for k, v in old_shape.items()}
+    if "pod" in new_shape:
+        new_shape["pod"] = p
+    new_shape["data"] = data
+    new_shape["model"] = m
+    return RemeshPlan(
+        old_shape=dict(old_shape), new_shape=new_shape, n_alive=n_alive,
+        dropped_chips=n_alive - m * p * data,
+        reshard_required=(m != model),
+        note=("model axis preserved; DP shrunk" if m == model else
+              "model axis shrunk — full reshard via checkpoint restore"),
+    )
+
+
+def _largest_pow2(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p if n >= 1 else 0
+
+
+def _divisor_chain(n: int):
+    d = n
+    while d >= 1:
+        yield d
+        d //= 2
+
+
+def grad_accum_for_batch(global_batch: int, old_dp: int, new_dp: int,
+                         old_accum: int = 1) -> int:
+    """Keep the optimizer-visible global batch constant across a remesh by
+    scaling gradient-accumulation steps with the DP shrink factor."""
+    total_micro = old_dp * old_accum
+    accum = max(1, -(-total_micro // new_dp))
+    return accum

@@ -1,0 +1,93 @@
+"""Pipeline parallelism: GPipe-style stage runner on a "stage" mesh axis.
+
+For depth-wise scaling past what TP+FSDP cover, layers are split into
+``n_stages`` groups; microbatches stream through stages with
+``jax.lax.ppermute`` moving activations stage->stage inside ``shard_map``.
+The schedule is the classic GPipe fill/steady/drain: with M microbatches and
+S stages, ticks t = 0..M+S-2, stage s processes microbatch t-s when
+0 <= t-s < M. Bubble fraction = (S-1)/(M+S-1).
+
+This runner is forward-only here (serving/eval pipelines; the training path
+in this repo scales depth with FSDP+TP+remat instead — DESIGN §4 discusses
+the trade). It exists to prove the collective pattern lowers and to give the
+launcher a PP option for very deep archs; it is exercised on a CPU mesh in
+tests/test_distributed.py.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+Params = Any
+
+__all__ = ["pipeline_forward", "bubble_fraction"]
+
+
+def bubble_fraction(n_stages: int, n_micro: int) -> float:
+    return (n_stages - 1) / (n_micro + n_stages - 1)
+
+
+def pipeline_forward(mesh: Mesh, stage_fn: Callable[[Params, jax.Array],
+                                                    jax.Array],
+                     stage_params: Params, x: jax.Array,
+                     n_micro: int) -> jax.Array:
+    """Run ``x`` [B, ...] through ``n_stages`` pipeline stages.
+
+    mesh must contain a "stage" axis; ``stage_params`` leaves lead with the
+    stage dim (sharded over "stage"); every stage must preserve activation
+    shape (transformer blocks do).
+    """
+    n_stages = mesh.shape["stage"]
+    b = x.shape[0]
+    assert b % n_micro == 0, (b, n_micro)
+    micro = x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    def run(params, micro):
+        # inside shard_map: params [1, ...] (this stage's slice),
+        # micro [n_micro, mb, ...] (replicated input stream)
+        params = jax.tree.map(lambda a: a[0], params)
+        stage = jax.lax.axis_index("stage")
+        n_ticks = n_micro + n_stages - 1
+        buf = jnp.zeros_like(micro[0])                 # current activation
+        outs = jnp.zeros_like(micro)                   # last stage collects
+
+        def tick(t, carry):
+            buf, outs = carry
+            # receive from previous stage (stage 0 receives garbage; it
+            # overwrites below). ppermute shifts stage s -> s+1.
+            recv = jax.lax.ppermute(
+                buf, "stage",
+                [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            mb_idx = jnp.clip(t, 0, n_micro - 1)
+            inject = jnp.where(stage == 0,
+                               micro[mb_idx].astype(recv.dtype), recv)
+            my_mb = t - stage                          # which microbatch
+            active = (my_mb >= 0) & (my_mb < n_micro)
+            y = stage_fn(params, inject)
+            buf = jnp.where(active, y, buf)
+            # last stage commits its finished microbatch
+            commit = active & (stage == n_stages - 1)
+            outs = jax.lax.cond(
+                commit,
+                lambda o: o.at[jnp.clip(my_mb, 0, n_micro - 1)].set(y),
+                lambda o: o, outs)
+            return buf, outs
+
+        _, outs = jax.lax.fori_loop(0, n_ticks, tick, (buf, outs))
+        # only the last stage holds real outputs; broadcast them
+        outs = jax.lax.ppermute(
+            outs, "stage",
+            [((n_stages - 1 + i) % n_stages, i) for i in range(n_stages)])
+        return outs
+
+    out = jax.shard_map(
+        run, mesh=mesh,
+        in_specs=(P("stage"), P()),
+        out_specs=P(),
+        check_vma=False,
+    )(stage_params, micro)
+    return out.reshape(b, *x.shape[1:])

@@ -1,0 +1,64 @@
+"""Straggler detection & mitigation policy.
+
+Host-side step-time telemetry: per-step durations (optionally per-host, when
+the launcher aggregates them) feed a robust outlier detector (median +
+k*MAD). Persistent stragglers trigger a mitigation escalation:
+
+  1. log + tolerate (transient: GC pause, network blip),
+  2. rebalance data shards away from the slow host (not load-bearing on
+     TPU SPMD, provided for the input pipeline),
+  3. declare the host unhealthy -> elastic.plan_remesh + checkpoint restore.
+
+The detector is pure and unit-tested; the Trainer wires it to wall clocks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from collections import deque
+
+__all__ = ["StragglerMonitor", "StepReport"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StepReport:
+    step: int
+    duration_s: float
+    is_outlier: bool
+    severity: str            # "ok" | "slow" | "straggler"
+    median_s: float
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """Sliding-window robust outlier detection on step times."""
+    window: int = 50
+    slow_factor: float = 1.5        # > median * f -> "slow"
+    straggler_factor: float = 3.0   # > median * f -> "straggler"
+    patience: int = 3               # consecutive stragglers before escalation
+
+    def __post_init__(self):
+        self._times: deque[float] = deque(maxlen=self.window)
+        self._consecutive = 0
+
+    def report(self, step: int, duration_s: float) -> StepReport:
+        med = (statistics.median(self._times) if self._times
+               else duration_s)
+        self._times.append(duration_s)
+        if duration_s > med * self.straggler_factor and len(self._times) > 5:
+            self._consecutive += 1
+            sev = "straggler"
+        elif duration_s > med * self.slow_factor and len(self._times) > 5:
+            self._consecutive = 0
+            sev = "slow"
+        else:
+            self._consecutive = 0
+            sev = "ok"
+        return StepReport(step=step, duration_s=duration_s,
+                          is_outlier=sev != "ok", severity=sev, median_s=med)
+
+    @property
+    def should_escalate(self) -> bool:
+        """True when persistent straggling warrants a remesh (policy step 3)."""
+        return self._consecutive >= self.patience

@@ -1,0 +1,10 @@
+"""IVIM application layer — the paper's target model and data.
+
+physics.py  — the IVIM signal equation (paper Eq. 1) and clinical parameter ranges.
+data.py     — synthetic SNR-leveled datasets (paper §III Phase 1 / §VI-A).
+model.py    — IVIM-NET and its Masksembles conversion uIVIM-NET (paper §IV).
+train.py    — unsupervised physics-loss training (paper §IV).
+evaluate.py — RMSE / uncertainty vs SNR evaluation (paper Figs. 6-7).
+"""
+
+from repro.ivim import data, evaluate, model, physics, train  # noqa: F401

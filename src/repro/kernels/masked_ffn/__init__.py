@@ -1,0 +1,1 @@
+from repro.kernels.masked_ffn.ops import masked_ffn, masked_ffn_all_samples  # noqa: F401

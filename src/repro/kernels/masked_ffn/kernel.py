@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: packed N-sample masked FFN (the paper's §V hot-spot).
+
+Computes, for every mask-sample n and batch tile b:
+
+    h = relu(x[b] @ w1p[n] + b1p[n])      # hidden stays in VMEM (the paper's
+    y[n, b] = h @ w2p[n] + b2             # "intermediate layer cache")
+
+Hardware mapping of the paper's two optimizations:
+
+* **Mask-zero skipping** happens *before* this kernel: w1p/w2p are the packed
+  dense per-sample weights (core/packing.py) — the kernel never sees a mask,
+  exactly like the FPGA PEs never see dropped weights.
+
+* **Batch-level scheme** is the grid order: ``grid = (N, B/bB)`` with the
+  sample index outermost and weight BlockSpecs that depend only on ``n``.
+  Pallas fetches a block from HBM only when its index changes between
+  consecutive grid steps, so each sample's weights cross HBM->VMEM **once**
+  while the whole batch streams through — N weight loads per batch instead of
+  N x (B/bB) (paper Fig. 5). The sampling-level order would be
+  ``grid=(B/bB, N)``; ops.py exposes it for the traffic A/B benchmark.
+
+VMEM tiling: the hidden activation [bB, K] lives in a VMEM scratch tile and
+never round-trips to HBM — the FPGA's "intermediate layer cache" (§V-B).
+All matmul operands are zero-padded to MXU-aligned shapes by ops.py; padding
+is exact because relu(0)=0 and padded rows of w2p are zero.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["masked_ffn_pallas"]
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, h_ref):
+    """One (sample, batch-tile) grid step.
+
+    x_ref  [bB, D]   — batch tile (changes every inner step)
+    w1_ref [1, D, K] — sample n's packed first-layer weights (outer-only index)
+    b1_ref [1, K]
+    w2_ref [1, K, D2]
+    b2_ref [D2]
+    o_ref  [1, bB, D2]
+    h_ref  [bB, K]   — VMEM scratch: the intermediate layer cache
+    """
+    x = x_ref[...]
+    h_ref[...] = jnp.maximum(
+        jnp.dot(x, w1_ref[0], preferred_element_type=jnp.float32)
+        + b1_ref[0][None, :].astype(jnp.float32), 0.0)
+    y = jnp.dot(h_ref[...].astype(x.dtype), w2_ref[0],
+                preferred_element_type=jnp.float32)
+    o_ref[0] = (y + b2_ref[...][None, :].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "sample_major",
+                                             "interpret"))
+def masked_ffn_pallas(x: jax.Array, w1p: jax.Array, b1p: jax.Array,
+                      w2p: jax.Array, b2: jax.Array, *,
+                      block_b: int = 128, sample_major: bool = True,
+                      interpret: bool = False) -> jax.Array:
+    """x [B, D], w1p [N, D, K], b1p [N, K], w2p [N, K, D2], b2 [D2]
+    -> y [N, B, D2].
+
+    sample_major=True  -> batch-level scheme (paper's optimization).
+    sample_major=False -> sampling-level baseline (weights re-fetched per
+                          batch tile); numerics identical.
+    Shapes must already be MXU-aligned (ops.py pads).
+    """
+    n, d, k = w1p.shape
+    b = x.shape[0]
+    d2 = w2p.shape[-1]
+    if b % block_b:
+        raise ValueError(f"batch {b} not divisible by block_b {block_b}")
+    nb = b // block_b
+
+    if sample_major:
+        grid = (n, nb)
+        s, t = 0, 1          # grid index -> (sample, batch-tile)
+    else:
+        grid = (nb, n)
+        s, t = 1, 0
+
+    def at(which):
+        # which='s' -> sample index, 'b' -> batch-tile index
+        return (lambda i, j: (i, j)[s]) if which == "s" else \
+               (lambda i, j: (i, j)[t])
+
+    sample_ix, batch_ix = at("s"), at("b")
+
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i, j, f=batch_ix: (f(i, j), 0)),
+            pl.BlockSpec((1, d, k), lambda i, j, f=sample_ix: (f(i, j), 0, 0)),
+            pl.BlockSpec((1, k), lambda i, j, f=sample_ix: (f(i, j), 0)),
+            pl.BlockSpec((1, k, d2), lambda i, j, f=sample_ix: (f(i, j), 0, 0)),
+            pl.BlockSpec((d2,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_b, d2),
+            lambda i, j, fs=sample_ix, fb=batch_ix: (fs(i, j), fb(i, j), 0)),
+        out_shape=jax.ShapeDtypeStruct((n, b, d2), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_b, k), jnp.float32)],
+        interpret=interpret,
+    )(x, w1p, b1p, w2p, b2)

@@ -1,0 +1,76 @@
+"""Public wrapper for the masked_ffn Pallas kernel.
+
+Handles: MXU-alignment padding (exact — see kernel.py docstring), automatic
+interpret mode off-TPU, and a convenience entry point that takes unpacked
+weights + masks and does the offline packing (mask-zero skipping) itself.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+from repro.kernels.masked_ffn import kernel as _kernel
+from repro.kernels.masked_ffn import ref as _ref
+
+__all__ = ["masked_ffn", "masked_ffn_all_samples", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "sample_major",
+                                             "interpret"))
+def masked_ffn(x: jax.Array, w1p: jax.Array, b1p: jax.Array,
+               w2p: jax.Array, b2: jax.Array, *,
+               block_b: int = 128, sample_major: bool = True,
+               interpret: bool | None = None) -> jax.Array:
+    """Packed N-sample masked FFN, MXU-aligned and batch-tiled.
+
+    x [B, D], w1p [N, D, K], b1p [N, K], w2p [N, K, D2], b2 [D2] -> [N, B, D2].
+    Zero-padding D/K/D2 to 128 and B to block_b is exact (relu(0)=0 and the
+    padded w2p rows are zero). interpret=None -> auto (True off-TPU).
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    b, d2 = x.shape[0], w2p.shape[-1]
+    block_b = min(block_b, max(8, 1 << (b - 1).bit_length()))
+    xp = _pad_to(_pad_to(x, 1, 128), 0, block_b)
+    w1p_ = _pad_to(_pad_to(w1p, 1, 128), 2, 128)
+    b1p_ = _pad_to(b1p, 1, 128)
+    w2p_ = _pad_to(_pad_to(w2p, 1, 128), 2, 128)
+    b2_ = _pad_to(b2, 0, 128)
+    y = _kernel.masked_ffn_pallas(xp, w1p_, b1p_, w2p_, b2_,
+                                  block_b=block_b,
+                                  sample_major=sample_major,
+                                  interpret=interpret)
+    return y[:, :b, :d2]
+
+
+def masked_ffn_all_samples(x: jax.Array, w1: jax.Array, b1: jax.Array,
+                           w2: jax.Array, b2: jax.Array,
+                           masks: np.ndarray | jax.Array, **kw) -> jax.Array:
+    """Unpacked entry: packs offline (mask-zero skipping) then runs the
+    kernel. Matches ref.unpacked_masked_ffn_ref numerics exactly."""
+    packed = packing.pack_masked_ffn(w1, b1, w2, b2, masks)
+    return masked_ffn(x, packed["w1p"], packed["b1p"], packed["w2p"],
+                      packed["b2"], **kw)
+
+
+# Re-export the oracle so callers can A/B without importing ref directly.
+masked_ffn_ref = _ref.masked_ffn_ref

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the masked_ffn kernel (tests assert_allclose vs this)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["masked_ffn_ref", "unpacked_masked_ffn_ref"]
+
+
+def masked_ffn_ref(x: jax.Array, w1p: jax.Array, b1p: jax.Array,
+                   w2p: jax.Array, b2: jax.Array) -> jax.Array:
+    """Packed N-sample FFN: [B,D] x [N,D,K] -> [N,B,D2] (fp32 accumulate)."""
+    h = jnp.maximum(
+        jnp.einsum("bd,ndk->nbk", x, w1p,
+                   preferred_element_type=jnp.float32)
+        + b1p[:, None, :].astype(jnp.float32), 0.0)
+    y = jnp.einsum("nbk,nkm->nbm", h.astype(x.dtype), w2p,
+                   preferred_element_type=jnp.float32)
+    return (y + b2[None, None, :].astype(jnp.float32)).astype(x.dtype)
+
+
+def unpacked_masked_ffn_ref(x: jax.Array, w1: jax.Array, b1: jax.Array,
+                            w2: jax.Array, b2: jax.Array,
+                            masks: jax.Array) -> jax.Array:
+    """The *unpacked* semantics packing must match:
+    relu(x @ w1 + b1) * mask[n]  @ w2 + b2, for every mask n."""
+    h = jnp.maximum(x @ w1 + b1, 0.0)                      # [B, H]
+    hm = h[None] * masks[:, None, :].astype(h.dtype)       # [N, B, H]
+    return jnp.einsum("nbh,hm->nbm", hm, w2) + b2

@@ -1,0 +1,1 @@
+from repro.kernels.moments.ops import moments  # noqa: F401

@@ -1,0 +1,33 @@
+"""Public wrapper for the moments kernel: padding + auto-interpret."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moments import kernel as _kernel
+from repro.kernels.moments import ref as _ref
+
+__all__ = ["moments"]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def moments(samples: jax.Array, *, block_b: int = 256,
+            interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """samples [N, B, P] -> (mean, std) [B, P]. Pads B to the block and P to
+    the lane width; padded entries are sliced off (padding never mixes into
+    real outputs because the reduction is over N only)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, b, p = samples.shape
+    block_b = min(block_b, max(8, 1 << (b - 1).bit_length()))
+    pad_b, pad_p = (-b) % block_b, (-p) % 128
+    sp = jnp.pad(samples, ((0, 0), (0, pad_b), (0, pad_p)))
+    mean, std = _kernel.moments_pallas(sp, block_b=block_b,
+                                       interpret=interpret)
+    return mean[:b, :p], std[:b, :p]
+
+
+moments_ref = _ref.moments_ref

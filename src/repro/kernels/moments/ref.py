@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the moments kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["moments_ref"]
+
+
+def moments_ref(samples: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """[N, B, P] -> (mean [B,P], std [B,P]); population std, fp32 accumulate."""
+    s = samples.astype(jnp.float32)
+    mean = jnp.mean(s, axis=0)
+    std = jnp.std(s, axis=0)
+    return mean.astype(samples.dtype), std.astype(samples.dtype)

@@ -1,0 +1,43 @@
+"""Public wrapper for the RG-LRU scan kernel: padding + auto-interpret.
+
+Padding is exact: extra channels run an independent recurrence on zeros,
+extra batch rows likewise; both are sliced off. Time is never padded
+(a padded step would corrupt the carry), so S must tile block_s — callers
+use power-of-two sequence lengths.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan import kernel as _kernel
+from repro.kernels.rglru_scan import ref as _ref
+
+__all__ = ["rglru_scan"]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rglru_scan(a: jax.Array, b: jax.Array, *,
+               interpret: bool | None = None) -> jax.Array:
+    """a, b [B, S, W] -> h [B, S, W]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bsz, s, w = a.shape
+    block_b = min(8, bsz)
+    block_s = min(256, s)
+    block_w = min(128, w)
+    if bsz % block_b or s % block_s:
+        return _ref.rglru_scan_ref(a, b)     # non-tiling shapes: exact ref
+    pad_w = (-w) % block_w
+    if pad_w:
+        a = jnp.pad(a, ((0, 0), (0, 0), (0, pad_w)))
+        b = jnp.pad(b, ((0, 0), (0, 0), (0, pad_w)))
+    h = _kernel.rglru_scan_pallas(a, b, block_b=block_b, block_s=block_s,
+                                  block_w=block_w, interpret=interpret)
+    return h[:, :, :w]
+
+
+rglru_scan_ref = _ref.rglru_scan_ref

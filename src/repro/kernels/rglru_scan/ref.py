@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the RG-LRU scan kernel (associative scan)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rglru_scan_ref"]
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t via associative scan. a/b [B, S, W]."""
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h

@@ -1,0 +1,2 @@
+"""Launchers: production meshes, the multi-pod dry-run, the cell sweep, and
+the end-to-end train/serve drivers."""

@@ -1,0 +1,31 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state — the dry-run must set
+XLA_FLAGS before first jax init, and tests/benches must keep seeing 1 CPU
+device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_cpu_mesh", "SINGLE_POD_SHAPE",
+           "MULTI_POD_SHAPE"]
+
+SINGLE_POD_SHAPE = (16, 16)              # 256 chips (one v5e pod)
+MULTI_POD_SHAPE = (2, 16, 16)            # 2 pods = 512 chips
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=types)
+
+
+def make_cpu_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Small host-device mesh for CPU tests (requires the test process to
+    have set --xla_force_host_platform_device_count)."""
+    types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=types)

@@ -1,0 +1,140 @@
+"""Dry-run sweep: every (arch x shape) cell x {single-pod, multi-pod}.
+
+Each cell runs in a fresh subprocess (the dry-run pins XLA_FLAGS at import;
+isolation also bounds memory and lets a pathological cell time out without
+killing the sweep). Results land in results/dryrun/<mesh>/<arch>__<shape>.json
+— benchmarks/bench_roofline.py and EXPERIMENTS.md read from there.
+
+    PYTHONPATH=src python -m repro.launch.sweep --mesh single
+    PYTHONPATH=src python -m repro.launch.sweep --mesh multi
+    PYTHONPATH=src python -m repro.launch.sweep --report
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs.cells import enumerate_cells
+
+DEFAULT_OUT = "results/dryrun"
+
+
+def run_cell(cell, mesh: str, out_dir: str, timeout: int = 3600,
+             extra_args: list[str] | None = None) -> dict:
+    out_path = os.path.join(out_dir, mesh,
+                            f"{cell.arch_id}__{cell.shape.name}.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    if cell.skip:
+        result = {"arch": cell.arch_id, "shape": cell.shape.name,
+                  "skipped": cell.skip}
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=2)
+        return result
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", cell.arch_id, "--shape", cell.shape.name,
+           "--out", out_path] + (["--multi-pod"] if mesh == "multi" else [])
+    cmd += extra_args or []
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=timeout)
+        if proc.returncode != 0:
+            result = {"arch": cell.arch_id, "shape": cell.shape.name,
+                      "error": proc.stderr[-4000:],
+                      "wall_s": round(time.time() - t0, 1)}
+            with open(out_path, "w") as f:
+                json.dump(result, f, indent=2)
+            return result
+    except subprocess.TimeoutExpired:
+        result = {"arch": cell.arch_id, "shape": cell.shape.name,
+                  "error": f"timeout after {timeout}s"}
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=2)
+        return result
+    with open(out_path) as f:
+        return json.load(f)
+
+
+def report(out_dir: str) -> None:
+    for mesh in ("single", "multi"):
+        d = os.path.join(out_dir, mesh)
+        if not os.path.isdir(d):
+            continue
+        print(f"\n=== mesh: {mesh} ===")
+        hdr = (f"{'cell':42s} {'status':10s} {'mem/dev':>9s} "
+               f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+               f"{'dominant':>10s} {'roofline%':>9s}")
+        print(hdr)
+        for fn in sorted(os.listdir(d)):
+            with open(os.path.join(d, fn)) as f:
+                r = json.load(f)
+            name = f"{r.get('arch','?')}/{r.get('shape','?')}"
+            if "skipped" in r:
+                print(f"{name:42s} {'SKIP':10s}  ({r['skipped'][:60]})")
+                continue
+            if "error" in r:
+                print(f"{name:42s} {'ERROR':10s}  ({r['error'][:60]!r})")
+                continue
+            mem = r.get("memory", {}).get("est_live_bytes_per_device", 0)
+            rf = r.get("roofline", {})
+            frac = rf.get("roofline_fraction")
+            print(f"{name:42s} {'ok':10s} {mem/1e9:8.1f}G "
+                  f"{rf.get('compute_s', 0):10.4f} "
+                  f"{rf.get('memory_s', 0):10.4f} "
+                  f"{rf.get('collective_s', 0):10.4f} "
+                  f"{rf.get('dominant', '?'):>10s} "
+                  f"{(frac or 0) * 100:8.2f}%")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--only", default="",
+                    help="substring filter on arch/shape")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--report", action="store_true")
+    ap.add_argument("--extra", action="append", default=[],
+                    help="extra args forwarded to dryrun")
+    args = ap.parse_args(argv)
+
+    if args.report:
+        report(args.out)
+        return 0
+
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    cells = enumerate_cells()
+    failures = 0
+    for mesh in meshes:
+        for cell in cells:
+            if args.only and args.only not in cell.name:
+                continue
+            out_path = os.path.join(args.out, mesh,
+                                    f"{cell.arch_id}__{cell.shape.name}.json")
+            if args.skip_existing and os.path.exists(out_path):
+                with open(out_path) as f:
+                    prev = json.load(f)
+                if "error" not in prev:
+                    print(f"[skip existing] {mesh}/{cell.name}")
+                    continue
+            t0 = time.time()
+            r = run_cell(cell, mesh, args.out, timeout=args.timeout,
+                         extra_args=args.extra)
+            status = ("SKIP" if "skipped" in r
+                      else "ERROR" if "error" in r else "ok")
+            failures += status == "ERROR"
+            print(f"[{status:5s}] {mesh}/{cell.name} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    report(args.out)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

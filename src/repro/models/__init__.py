@@ -1,0 +1,18 @@
+"""Architecture zoo built from shared functional layers.
+
+layers.py      — norms, RoPE/M-RoPE, embeddings, GQA attention (three
+                 execution paths: tiny ref / chunked-scan XLA / Pallas flash),
+                 sliding-window attention, (masked) gated FFNs, KV caches.
+moe.py         — GShard-style grouped top-k capacity routing (+ arctic's
+                 dense residual), expert-parallel friendly einsum dispatch.
+rglru.py       — RecurrentGemma: RG-LRU diagonal recurrence via associative
+                 scan, short conv, gated recurrent block.
+xlstm.py       — xLSTM: chunkwise-parallel mLSTM (matrix memory, exponential
+                 gating, stabilized) + sequential sLSTM.
+transformer.py — segment-scanned stack: init / forward / prefill / decode
+                 for every family, with Masksembles-FFN as a first-class
+                 feature (the paper's technique).
+model.py       — Model facade + input_specs for the dry-run cells.
+"""
+
+from repro.models.model import Model, build_model  # noqa: F401

@@ -1,0 +1,447 @@
+"""Shared functional layers for the architecture zoo.
+
+Parameters are plain nested dicts (pytrees); every function is pure. Naming
+of leaves is load-bearing: repro.distributed.sharding maps leaf *paths* to
+PartitionSpecs, so weights follow the conventions
+  wq/wk/wv/wo   — attention projections
+  wg/wu/wd      — gated FFN (gate/up/down)
+  embed/unembed — token embedding / LM head
+  masks         — Masksembles constants (never trained)
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masks as masks_lib
+
+Params = dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# activation sharding hints
+# ---------------------------------------------------------------------------
+
+
+def constrain(x: jax.Array, spec: tuple) -> jax.Array:
+    """Best-effort with_sharding_constraint against the ambient abstract mesh.
+
+    spec entries: "batch" (-> ("pod","data") as available), a mesh axis name,
+    or None. Entries whose axis doesn't exist or doesn't divide the dim are
+    dropped, and with no mesh (CPU tests) this is the identity — model code
+    stays mesh-agnostic while the dry-run gets GSPMD hints.
+    """
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:  # noqa: BLE001 — no mesh machinery available
+        return x
+    if mesh is None or not mesh.axis_names:
+        return x
+    names = set(mesh.axis_names)
+    sizes = dict(mesh.shape)
+    resolved: list = []
+    for i, a in enumerate(spec):
+        if a == "batch":
+            ba = tuple(ax for ax in ("pod", "data") if ax in names)
+            tot = 1
+            for ax in ba:
+                tot *= sizes[ax]
+            resolved.append((ba if len(ba) > 1 else ba[0])
+                            if ba and x.shape[i] % tot == 0 else None)
+        elif a in names and x.shape[i] % sizes[a] == 0:
+            resolved.append(a)
+        else:
+            resolved.append(None)
+    if all(r is None for r in resolved):
+        return x
+    from jax.sharding import PartitionSpec
+    return jax.lax.with_sharding_constraint(x, PartitionSpec(*resolved))
+
+
+def axis_size(name: str) -> int:
+    """Size of a mesh axis in the ambient abstract mesh (1 if absent)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:  # noqa: BLE001
+        return 1
+    if mesh is None or name not in mesh.axis_names:
+        return 1
+    return dict(mesh.shape)[name]
+
+
+# ---------------------------------------------------------------------------
+# initializers / norms
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False,
+               scale: float | None = None) -> Params:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32)
+               * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def norm_init(width: int, kind: str, dtype) -> Params:
+    p = {"scale": jnp.ones((width,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((width,), dtype)
+    return p
+
+
+def norm_apply(p: Params, x: jax.Array, kind: str, eps: float = 1e-6
+               ) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE, partial RoPE, M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_cos_sin(positions: jax.Array, rot_dim: int, theta: float
+                 ) -> tuple[jax.Array, jax.Array]:
+    """positions [...] -> cos/sin [..., rot_dim/2] (fp32)."""
+    half = rot_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(positions: jax.Array, rot_dim: int, theta: float,
+                  sections: tuple[int, ...]) -> tuple[jax.Array, jax.Array]:
+    """Qwen2-VL M-RoPE. positions [3, ...] (temporal/height/width streams);
+    sections partition the rot_dim/2 frequency slots among the streams."""
+    assert sum(sections) == rot_dim // 2, (sections, rot_dim)
+    cos, sin = rope_cos_sin(positions, rot_dim, theta)  # [3, ..., half]
+    parts_c, parts_s = [], []
+    off = 0
+    for i, sec in enumerate(sections):
+        parts_c.append(cos[i, ..., off:off + sec])
+        parts_s.append(sin[i, ..., off:off + sec])
+        off += sec
+    return jnp.concatenate(parts_c, -1), jnp.concatenate(parts_s, -1)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,
+               rope_pct: float = 1.0) -> jax.Array:
+    """x [..., S, dh] with cos/sin [..., S, rot/2]; split-half convention.
+    rope_pct < 1 rotates only the leading fraction (StableLM-2 partial)."""
+    dh = x.shape[-1]
+    rot = int(dh * rope_pct)
+    rot -= rot % 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., :rot // 2], xr[..., rot // 2:]
+    cos = cos[..., :rot // 2].astype(x.dtype)
+    sin = sin[..., :rot // 2].astype(x.dtype)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return jnp.concatenate([out, xp], -1) if rot < dh else out
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA) — grouped einsum, three execution paths
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg, dtype) -> Params:
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d, h * dh, dtype, bias=cfg.qkv_bias),
+        "wk": dense_init(kk, d, hkv * dh, dtype, bias=cfg.qkv_bias),
+        "wv": dense_init(kv, d, hkv * dh, dtype, bias=cfg.qkv_bias),
+        "wo": dense_init(ko, h * dh, d, dtype,
+                         scale=1.0 / math.sqrt(h * dh)),
+    }
+
+
+def _split_heads(x: jax.Array, n: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, -1).transpose(0, 2, 1, 3)   # [B, n, S, dh]
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def _grouped_scores(q: jax.Array, k: jax.Array,
+                    scores_f32: bool = True) -> jax.Array:
+    """q [B,H,Sq,dh], k [B,Hkv,Sk,dh] -> scores [B,Hkv,G,Sq,Sk] without
+    materializing the kv-head repeat (G = H/Hkv). scores_f32=False keeps
+    the score matrix in bf16 (the MXU accumulates in f32 either way; only
+    the stored matrix narrows) — halves the dominant HBM term of the
+    XLA attention path (EXPERIMENTS §Perf, qwen2-vl iteration 4)."""
+    b, h, sq, dh = q.shape
+    hkv = k.shape[1]
+    qg = q.reshape(b, hkv, h // hkv, sq, dh)
+    out = jnp.einsum("bkgqd,bksd->bkgqs", qg, k,
+                     preferred_element_type=jnp.float32)
+    return out if scores_f32 else out.astype(q.dtype)
+
+
+def _grouped_combine(p: jax.Array, v: jax.Array) -> jax.Array:
+    """p [B,Hkv,G,Sq,Sk] x v [B,Hkv,Sk,dh] -> [B,H,Sq,dh]."""
+    b, hkv, g, sq, _ = p.shape
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p.astype(v.dtype), v)
+    return out.reshape(b, hkv * g, sq, -1)
+
+
+def attention_full(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool, q_offset: int | jax.Array = 0,
+                   window: int = 0, scores_f32: bool = True) -> jax.Array:
+    """Reference path — materializes [Sq, Sk] scores. Used for small shapes
+    and as the oracle for the chunked/flash paths."""
+    dh = q.shape[-1]
+    s = _grouped_scores(q, k, scores_f32) / math.sqrt(dh)
+    sq, sk = s.shape[-2], s.shape[-1]
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s.astype(jnp.float32), -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return _grouped_combine(p, v)
+
+
+def attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, chunk: int = 1024,
+                      scores_f32: bool = True,
+                      unroll: bool = False) -> jax.Array:
+    """XLA path for long prefill: lax.scan over query chunks — peak memory
+    O(chunk x S) instead of O(S^2). Exact (per-chunk softmax over the full
+    key axis). The Pallas flash kernel replaces this on real TPU."""
+    b, h, sq, dh = q.shape
+    if sq % chunk:
+        return attention_full(q, k, v, causal=causal,
+                              scores_f32=scores_f32)
+    qc = q.reshape(b, h, sq // chunk, chunk, dh).transpose(2, 0, 1, 3, 4)
+
+    # checkpoint the chunk body: without it the scan stacks every chunk's
+    # f32 score matrix as a backward residual (O(S^2) memory again — the
+    # exact thing chunking is meant to avoid); with it the backward
+    # recomputes one chunk's scores at a time.
+    @jax.checkpoint
+    def body(_, args):
+        i, qi = args
+        out = attention_full(qi, k, v, causal=causal, q_offset=i * chunk,
+                             scores_f32=scores_f32)
+        return None, out
+
+    if unroll:  # cost probes: loop-free graph, same per-chunk structure
+        outs = jnp.stack([body(None, (jnp.int32(i), qc[i]))[1]
+                          for i in range(sq // chunk)])
+    else:
+        _, outs = jax.lax.scan(body, None,
+                               (jnp.arange(sq // chunk), qc))
+    return outs.transpose(1, 2, 0, 3, 4).reshape(b, h, sq, dh)
+
+
+def attention_banded(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     window: int, unroll: bool = False) -> jax.Array:
+    """Sliding-window attention, linear in S: scan over query chunks of size
+    `window`, each attending to a 2-window key band (RecurrentGemma local
+    attention). Exact vs attention_full(window=window)."""
+    b, h, sq, dh = q.shape
+    w = window
+    if sq <= w or sq % w:
+        return attention_full(q, k, v, causal=True, window=w)
+    hkv = k.shape[1]
+    kp = jnp.pad(k, ((0, 0), (0, 0), (w, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (w, 0), (0, 0)))
+    qc = q.reshape(b, h, sq // w, w, dh).transpose(2, 0, 1, 3, 4)
+
+    @jax.checkpoint
+    def body(_, args):
+        i, qi = args
+        start = i * w                                   # padded coords
+        kb = jax.lax.dynamic_slice_in_dim(kp, start, 2 * w, axis=2)
+        vb = jax.lax.dynamic_slice_in_dim(vp, start, 2 * w, axis=2)
+        s = _grouped_scores(qi, kb) / math.sqrt(dh)     # [B,Hkv,G,w,2w]
+        qpos = jnp.arange(w)[:, None] + w               # band-local coords
+        kpos = jnp.arange(2 * w)[None, :]
+        valid = (kpos <= qpos) & (kpos > qpos - w) & (kpos + start >= w)
+        s = jnp.where(valid, s, -1e30)
+        out = _grouped_combine(jax.nn.softmax(s, -1), vb)
+        return None, out
+
+    if unroll:
+        outs = jnp.stack([body(None, (jnp.int32(i), qc[i]))[1]
+                          for i in range(sq // w)])
+    else:
+        _, outs = jax.lax.scan(body, None, (jnp.arange(sq // w), qc))
+    return outs.transpose(1, 2, 0, 3, 4).reshape(b, h, sq, dh)
+
+
+def attention_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kpos: jax.Array, pos: jax.Array) -> jax.Array:
+    """One-token decode: q [B,H,1,dh] vs cache [B,Hkv,Smax,dh]. ``kpos``
+    [Smax] holds the global position stored in each cache slot (-1 = empty);
+    slots with kpos > pos or kpos < 0 are masked (covers both the linear
+    cache and the rolling local-window cache)."""
+    dh = q.shape[-1]
+    s = _grouped_scores(q, k_cache) / math.sqrt(dh)     # [B,Hkv,G,1,Smax]
+    valid = (kpos >= 0) & (kpos <= pos)
+    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return _grouped_combine(p, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# KV caches
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(batch: int, n_kv: int, max_seq: int, dh: int, dtype
+                  ) -> Params:
+    return {
+        "k": jnp.zeros((batch, n_kv, max_seq, dh), dtype),
+        "v": jnp.zeros((batch, n_kv, max_seq, dh), dtype),
+        "kpos": jnp.full((max_seq,), -1, jnp.int32),
+    }
+
+
+def kv_cache_specs(batch: int, n_kv: int, max_seq: int, dh: int, dtype
+                   ) -> Params:
+    return {
+        "k": jax.ShapeDtypeStruct((batch, n_kv, max_seq, dh), dtype),
+        "v": jax.ShapeDtypeStruct((batch, n_kv, max_seq, dh), dtype),
+        "kpos": jax.ShapeDtypeStruct((max_seq,), jnp.int32),
+    }
+
+
+def kv_cache_update(cache: Params, k_new: jax.Array, v_new: jax.Array,
+                    pos: jax.Array, window: int = 0) -> Params:
+    """Write one step's K/V at slot ``pos`` (or ``pos % W`` rolling)."""
+    smax = cache["k"].shape[2]
+    slot = (pos % window) if window else pos
+    slot = jnp.asarray(slot, jnp.int32) % smax
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=2)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=2)
+    kpos = jax.lax.dynamic_update_slice_in_dim(
+        cache["kpos"], jnp.asarray(pos, jnp.int32)[None], slot, axis=0)
+    return {"k": k, "v": v, "kpos": kpos}
+
+
+# ---------------------------------------------------------------------------
+# FFNs — gated (SwiGLU/GeGLU), plain MLP, and the paper's Masksembles form
+# ---------------------------------------------------------------------------
+
+
+def ffn_init(key, cfg, d_ff: int | None = None, dtype=None) -> Params:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dtype = dtype or cfg.dtype
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.bayesian and cfg.packed_ffn_serving:
+        # serving form (mask-zero skipping, paper §V-C): per-sample packed
+        # dense weights over the KEPT hidden units only — no masks in the
+        # graph. Shapes [N, d, K]; real deployments convert a trained
+        # checkpoint via models.pack_ffn_params (equivalence tested).
+        n = cfg.mask_samples
+        kk = masks_lib.keep_count(f, n, cfg.mask_scale)
+        sc = 1.0 / math.sqrt(d)
+        def pinit(k, shape, s):
+            return (jax.random.normal(k, shape, jnp.float32) * s).astype(dtype)
+        if cfg.activation in ("silu", "gelu"):
+            return {"wgp": pinit(k1, (n, d, kk), sc),
+                    "wup": pinit(k2, (n, d, kk), sc),
+                    "wdp": pinit(k3, (n, kk, d), 1.0 / math.sqrt(kk))}
+        return {"wup": pinit(k1, (n, d, kk), sc),
+                "wdp": pinit(k2, (n, kk, d), 1.0 / math.sqrt(kk))}
+    if cfg.activation in ("silu", "gelu"):       # gated
+        p = {"wg": dense_init(k1, d, f, dtype),
+             "wu": dense_init(k2, d, f, dtype),
+             "wd": dense_init(k3, f, d, dtype)}
+    else:                                        # plain MLP (gelu_mlp)
+        p = {"wu": dense_init(k1, d, f, dtype, bias=True),
+             "wd": dense_init(k2, f, d, dtype, bias=True)}
+    if cfg.bayesian:
+        spec = masks_lib.MaskSpec(width=f, n_masks=cfg.mask_samples,
+                                  scale=cfg.mask_scale, seed=cfg.mask_seed)
+        p["masks"] = jnp.asarray(masks_lib.generate_masks(spec), dtype)
+    return p
+
+
+def ffn_apply(p: Params, x: jax.Array, cfg,
+              mask_ids: jax.Array | None = None) -> jax.Array:
+    """Gated or plain FFN; if the config is Bayesian and mask_ids [B] are
+    given, the fixed Masksembles mask multiplies the hidden units — the
+    paper's technique at its transformer integration point. Activations are
+    zero-preserving, so the serving path may pack instead (packed leaves,
+    mask-zero skipping: rows must be grouped [sample0 rows..., sample1
+    rows, ...] as serve_uncertain arranges)."""
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+           "gelu_mlp": jax.nn.gelu}[cfg.activation]
+    if "wdp" in p:                               # packed serving form
+        n = p["wdp"].shape[0]
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        xg = x.reshape(n, b // n, *x.shape[1:])  # [N, B/N, S, D]
+        if "wgp" in p:
+            h = act(jnp.einsum("nbsd,ndk->nbsk", xg, p["wgp"])) * \
+                jnp.einsum("nbsd,ndk->nbsk", xg, p["wup"])
+        else:
+            h = act(jnp.einsum("nbsd,ndk->nbsk", xg, p["wup"]))
+        y = jnp.einsum("nbsk,nkd->nbsd", h, p["wdp"])
+        return y.reshape(x.shape)
+    if "wg" in p:
+        h = act(dense(p["wg"], x)) * dense(p["wu"], x)
+    else:
+        h = act(dense(p["wu"], x))
+    if mask_ids is not None and "masks" in p:
+        m = p["masks"][mask_ids]                 # [B, F]
+        h = h * m[:, None, :] if h.ndim == 3 else h * m
+    return dense(p["wd"], h)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, cfg, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {"embed": (jax.random.normal(k1, (cfg.vocab_size, cfg.d_model),
+                                     jnp.float32) * 0.02).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(k2, cfg.d_model, cfg.vocab_size, dtype)
+    return p
+
+
+def embed_tokens(p: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["embed"], tokens, axis=0)
+
+
+def lm_head(p: Params, x: jax.Array) -> jax.Array:
+    if "unembed" in p:
+        return dense(p["unembed"], x)
+    return x @ p["embed"].T

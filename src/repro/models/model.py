@@ -1,0 +1,124 @@
+"""Model facade: one object per architecture config, uniform API.
+
+    model = build_model(get_config("qwen2-1.5b"))
+    params = model.init(key)                       # smoke/small configs only
+    loss, metrics = model.loss(params, batch)      # training graph
+    logits, cache = model.prefill(params, batch)   # serving: prompt
+    logits, cache = model.decode_step(params, cache, tok, pos)
+
+``input_specs(shape)`` produces ShapeDtypeStruct stand-ins for every input of
+the step function a dry-run cell lowers — weak-type-correct, shardable, no
+device allocation. Full-size configs are exercised *only* through these.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer
+
+Params = dict[str, Any]
+
+__all__ = ["Model", "build_model", "cross_entropy"]
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Token-mean CE without materializing fp32 [B,S,V] twice: max-subtracted
+    logsumexp in fp32, gather of the label logit."""
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lf, -1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), -1)) + m[..., 0]
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---- construction ------------------------------------------------------
+    def init(self, key) -> Params:
+        return transformer.init(self.cfg, key)
+
+    def param_specs(self) -> Params:
+        """Parameter ShapeDtypeStructs without allocating (for dry-runs)."""
+        return jax.eval_shape(
+            lambda: transformer.init(self.cfg, jax.random.PRNGKey(0)))
+
+    # ---- training ----------------------------------------------------------
+    def forward(self, params: Params, batch: Params,
+                mask_ids: jax.Array | None = None):
+        return transformer.forward(self.cfg, params, batch,
+                                   mask_ids=mask_ids)
+
+    def loss(self, params: Params, batch: Params
+             ) -> tuple[jax.Array, dict[str, jax.Array]]:
+        logits, aux = self.forward(params, batch)
+        ce = cross_entropy(logits, batch["labels"])
+        total = ce + MOE_AUX_WEIGHT * aux
+        return total, {"ce": ce, "moe_aux": aux}
+
+    # ---- serving -----------------------------------------------------------
+    def prefill(self, params: Params, batch: Params,
+                max_seq: int | None = None):
+        return transformer.prefill(self.cfg, params, batch, max_seq=max_seq)
+
+    def decode_step(self, params: Params, caches, tokens: jax.Array,
+                    pos: jax.Array):
+        return transformer.decode_step(self.cfg, params, caches, tokens, pos)
+
+    def init_cache(self, batch: int, max_seq: int):
+        return transformer.init_cache(self.cfg, batch, max_seq)
+
+    def cache_specs(self, batch: int, max_seq: int):
+        return transformer.cache_specs(self.cfg, batch, max_seq)
+
+    # ---- dry-run inputs ----------------------------------------------------
+    def input_specs(self, shape: InputShape) -> Params:
+        """ShapeDtypeStruct stand-ins for one dry-run cell.
+
+        train   -> kwargs of train_step(batch=...)
+        prefill -> kwargs of prefill(batch=...)
+        decode  -> kwargs of decode_step(tokens=..., pos=...) (+ caches,
+                   fetched separately via cache_specs).
+        """
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32, d = jnp.int32, cfg.d_model
+        tok = jax.ShapeDtypeStruct((b, s), i32)
+        if shape.kind == "train":
+            batch: Params = {"labels": jax.ShapeDtypeStruct((b, s), i32)}
+            if cfg.embeds_input and cfg.family == "audio":
+                batch["embeds"] = jax.ShapeDtypeStruct((b, s, d), cfg.dtype)
+            else:
+                batch["tokens"] = tok
+            return {"batch": batch}
+        if shape.kind == "prefill":
+            batch = {}
+            if cfg.embeds_input:
+                # modality frontend stub: precomputed frame/patch embeddings
+                batch["embeds"] = jax.ShapeDtypeStruct((b, s, d), cfg.dtype)
+                if cfg.m_rope_sections:
+                    batch["positions"] = jax.ShapeDtypeStruct((3, b, s), i32)
+            else:
+                batch["tokens"] = tok
+            return {"batch": batch}
+        if shape.kind == "decode":
+            if not cfg.has_decode:
+                raise ValueError(f"{cfg.arch_id} is encoder-only: no decode")
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+                "pos": jax.ShapeDtypeStruct((), i32),
+            }
+        raise ValueError(shape.kind)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

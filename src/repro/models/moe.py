@@ -1,0 +1,132 @@
+"""Mixture-of-Experts FFN — GShard-style grouped top-k capacity routing.
+
+Tokens are split into groups of ``moe_group_size``; within each group every
+token picks its top-k experts and is assigned a capacity slot. Dispatch and
+combine are one-hot einsums, which GSPMD turns into all-to-alls when tokens
+are data-sharded and experts model-sharded — the standard expert-parallel
+lowering on TPU. Over-capacity tokens are dropped (their FFN output is zero;
+the residual stream carries them through), matching the classic dropped-token
+MoE used by Switch/GShard and the configs assigned here.
+
+Masksembles over expert hidden units: the mask id of each token rides the
+dispatch one-hot, so each capacity slot knows which fixed mask to apply to
+its expert's hidden layer — the paper's technique survives routing intact
+(router untouched; see DESIGN §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks as masks_lib
+from repro.models import layers
+
+Params = dict[str, Any]
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, cfg, dtype) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    kr, kg, ku, kd, kres = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(d)
+    p: Params = {
+        "router": layers.dense_init(kr, d, e, dtype),
+        # experts stacked on a leading E axis -> shard over "model"
+        "weg": (jax.random.normal(kg, (e, d, f), jnp.float32) * scale).astype(dtype),
+        "weu": (jax.random.normal(ku, (e, d, f), jnp.float32) * scale).astype(dtype),
+        "wed": (jax.random.normal(kd, (e, f, d), jnp.float32)
+                / math.sqrt(f)).astype(dtype),
+    }
+    if cfg.moe_dense_residual:      # arctic: dense FFN in parallel
+        p["dense"] = layers.ffn_init(kres, cfg, dtype=dtype)
+    if cfg.bayesian:
+        spec = masks_lib.MaskSpec(width=f, n_masks=cfg.mask_samples,
+                                  scale=cfg.mask_scale, seed=cfg.mask_seed)
+        p["masks"] = jnp.asarray(masks_lib.generate_masks(spec), dtype)
+    return p
+
+
+def _capacity(cfg, group: int) -> int:
+    c = int(cfg.capacity_factor * cfg.top_k * group / cfg.n_experts)
+    return max(cfg.top_k, min(group, c))
+
+
+def moe_apply(p: Params, x: jax.Array, cfg,
+              mask_ids: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """x [B, S, D] -> (y [B, S, D], aux_loss scalar).
+
+    aux_loss is the standard load-balancing loss (mean over groups of
+    E * sum_e f_e * P_e), weighted by the caller.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    tokens = b * s
+    group = min(cfg.moe_group_size, tokens)
+    if tokens % group:
+        group = tokens // max(1, tokens // group)   # largest divisor <= group
+        while tokens % group:
+            group += 1
+    n_groups = tokens // group
+    cap = _capacity(cfg, group)
+
+    xt = x.reshape(n_groups, group, d)
+    logits = layers.dense(p["router"], xt).astype(jnp.float32)  # [G,T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k selection; slot assignment by prefix-sum position per expert.
+    topv, topi = jax.lax.top_k(probs, k)                        # [G,T,k]
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.float32)         # [G,T,k,E]
+    # position of each (token, choice) within its expert's queue
+    pos = jnp.cumsum(onehot.reshape(n_groups, group * k, e), axis=1)
+    pos = pos.reshape(n_groups, group, k, e) * onehot - 1.0     # [G,T,k,E]
+    keep = (pos >= 0) & (pos < cap)
+    gate = topv[..., None] * keep                               # [G,T,k,E]
+    slot_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap,
+                             dtype=x.dtype) * keep[..., None]
+    dispatch = jnp.einsum("gtke,gtkec->gtec", onehot.astype(x.dtype),
+                          slot_oh)                              # [G,T,E,C]
+    combine = jnp.einsum("gtke,gtkec->gtec",
+                         gate.astype(jnp.float32),
+                         slot_oh.astype(jnp.float32))           # [G,T,E,C]
+
+    # ---- dispatch -> expert FFN -> combine --------------------------------
+    # Expert-parallel activation sharding: slot tensors shard the expert dim
+    # over "model" (the dispatch einsum becomes GSPMD's all-to-all) and the
+    # group dim over the batch axes. Without these hints the [G,E,C,*]
+    # tensors replicate over "model" and blow the per-device HBM budget.
+    ep = ("batch", "model", None, None)
+    if cfg.moe_local_groups:
+        # groups are (batch x model)-sharded; pinning E to "model" too would
+        # conflict — let GSPMD pick the dispatch a2a layout
+        ep = None
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xt)             # [G,E,C,D]
+    xe = layers.constrain(xe, ep) if ep else xe
+    act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("gecd,edf->gecf", xe, p["weg"])) * \
+        jnp.einsum("gecd,edf->gecf", xe, p["weu"])              # [G,E,C,F]
+    h = layers.constrain(h, ep) if ep else h
+    if mask_ids is not None and "masks" in p:
+        # route each token's mask id through the same dispatch
+        mid = mask_ids.astype(x.dtype)
+        mid = jnp.broadcast_to(mid[:, None], (b, s)).reshape(n_groups, group)
+        slot_mid = jnp.einsum("gtec,gt->gec", dispatch, mid)    # [G,E,C]
+        slot_mask = p["masks"][slot_mid.astype(jnp.int32)]      # [G,E,C,F]
+        h = h * slot_mask
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wed"])              # [G,E,C,D]
+    ye = layers.constrain(ye, ep) if ep else ye
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), ye)
+
+    # ---- aux load-balancing loss -------------------------------------------
+    f_e = jnp.mean(onehot[..., 0, :] if k == 1 else onehot.sum(2), axis=1)
+    p_e = jnp.mean(probs, axis=1)
+    aux = jnp.mean(jnp.sum(f_e * p_e, axis=-1)) * e
+
+    y = y.reshape(b, s, d)
+    if "dense" in p:                # arctic's parallel dense residual
+        y = y + layers.ffn_apply(p["dense"], x, cfg, mask_ids=mask_ids)
+    return y, aux.astype(jnp.float32)

@@ -1,0 +1,152 @@
+"""RecurrentGemma building blocks: RG-LRU + short conv + gated block.
+
+RG-LRU (De et al., arXiv:2402.19427):
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    a_t = a ^ (c * r_t),  a = sigmoid(Lambda)   (per-channel, c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is *diagonal*, so prefill runs as a ``jax.lax.associative_scan``
+over time — O(log S) depth, fully parallel on TPU — instead of a sequential
+scan. This is the TPU-native adaptation: the GPU reference implements a fused
+sequential kernel; on TPU the associative-scan lowering keeps the MXU busy
+with the surrounding projections while the VPU handles the elementwise scan.
+Decode is the one-step recurrence (state [B, W], O(1) per token — this is
+why the hybrid family runs the long_500k cell).
+
+Block structure (paper Fig. 2 of the Griffin/RecurrentGemma line):
+    y = W_out ( GeLU(W_gate x) * RG-LRU(conv1d_4(W_x x)) )
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Params = dict[str, Any]
+
+__all__ = ["rglru_init", "rglru_scan", "rglru_step", "rec_block_init",
+           "rec_block_apply", "rec_block_step", "rec_state_init",
+           "rec_state_specs"]
+
+_C = 8.0  # RG-LRU exponent constant
+_MIN_RAD, _MAX_RAD = 0.9, 0.999
+
+
+def rglru_init(key, width: int, dtype) -> Params:
+    ka, kx, kl = jax.random.split(key, 3)
+    # Lambda init so that a = sigmoid(Lambda) lands in [0.9, 0.999]
+    u = jax.random.uniform(kl, (width,), jnp.float32)
+    a = _MIN_RAD + u * (_MAX_RAD - _MIN_RAD)
+    lam = jnp.log(a / (1 - a))
+    return {
+        "wa": layers.dense_init(ka, width, width, dtype, bias=True),
+        "wx": layers.dense_init(kx, width, width, dtype, bias=True),
+        "lambda": lam.astype(jnp.float32),
+    }
+
+
+def _gates(p: Params, x: jax.Array):
+    r = jax.nn.sigmoid(layers.dense(p["wa"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(layers.dense(p["wx"], x).astype(jnp.float32))
+    log_a_base = jax.nn.log_sigmoid(p["lambda"])       # log a  (<0)
+    log_a = _C * r * log_a_base                        # a_t = a^(c r_t)
+    a = jnp.exp(log_a)
+    gated_x = i * x.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated_x
+    return a, b
+
+
+def rglru_scan(p: Params, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Prefill: x [B, S, W] -> (y [B, S, W], final_state [B, W]).
+
+    h_t = a_t h_{t-1} + b_t solved with an associative scan over the
+    (a, b) pairs: (a2, b2) o (a1, b1) = (a1*a2, a2*b1 + b2).
+    """
+    a, b = _gates(p, x)                                # [B, S, W] fp32
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh.astype(x.dtype), hh[:, -1, :]
+
+
+def rglru_step(p: Params, x: jax.Array, h: jax.Array
+               ) -> tuple[jax.Array, jax.Array]:
+    """Decode: x [B, W], h [B, W] -> (y, h_new)."""
+    a, b = _gates(p, x[:, None, :])
+    h_new = a[:, 0] * h + b[:, 0]
+    return h_new.astype(x.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# full recurrent block (gate branch * LRU branch)
+# ---------------------------------------------------------------------------
+
+
+def rec_block_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    kg, ki, ko, kl, kc = jax.random.split(key, 5)
+    return {
+        "wgate": layers.dense_init(kg, d, w, dtype),
+        "win": layers.dense_init(ki, d, w, dtype),
+        "wout": layers.dense_init(ko, w, d, dtype, scale=1.0 / math.sqrt(w)),
+        "conv": (jax.random.normal(kc, (cfg.conv_width, w), jnp.float32)
+                 / math.sqrt(cfg.conv_width)).astype(dtype),
+        "lru": rglru_init(kl, w, dtype),
+    }
+
+
+def _causal_conv(w: jax.Array, x: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv over time. x [B,S,W], w [K,W]. Returns
+    (y [B,S,W], new_state [B,K-1,W])."""
+    kw = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], kw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(kw))
+    return y, xp[:, -(kw - 1):, :] if kw > 1 else state
+
+
+def rec_state_init(batch: int, cfg, dtype) -> Params:
+    w = cfg.lru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype)}
+
+
+def rec_state_specs(batch: int, cfg, dtype) -> Params:
+    w = cfg.lru_width or cfg.d_model
+    return {"h": jax.ShapeDtypeStruct((batch, w), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, w),
+                                         dtype)}
+
+
+def rec_block_apply(p: Params, x: jax.Array, cfg) -> tuple[jax.Array, Params]:
+    """Prefill: x [B,S,D] -> (y [B,S,D], final recurrent state)."""
+    gate = jax.nn.gelu(layers.dense(p["wgate"], x))
+    u = layers.dense(p["win"], x)
+    u, conv_state = _causal_conv(p["conv"], u)
+    lru_out, h_last = rglru_scan(p["lru"], u)
+    y = layers.dense(p["wout"], gate * lru_out)
+    return y, {"h": h_last, "conv": conv_state}
+
+
+def rec_block_step(p: Params, x: jax.Array, state: Params, cfg
+                   ) -> tuple[jax.Array, Params]:
+    """Decode: x [B,D] -> (y [B,D], new state)."""
+    gate = jax.nn.gelu(layers.dense(p["wgate"], x))
+    u = layers.dense(p["win"], x)
+    u3, conv_state = _causal_conv(p["conv"], u[:, None, :], state["conv"])
+    lru_out, h_new = rglru_step(p["lru"], u3[:, 0, :], state["h"])
+    y = layers.dense(p["wout"], gate * lru_out)
+    return y, {"h": h_new, "conv": conv_state}

@@ -1,0 +1,496 @@
+"""Segment-scanned model stack for every assigned architecture family.
+
+The layer stack is a sequence of *segments* (configs/base.py): homogeneous
+runs of a repeating block pattern. Each segment's repetitions execute under
+one ``jax.lax.scan`` over stacked parameters — an 80-layer model compiles a
+single block body, keeping HLO size and compile time flat in depth — with
+``jax.checkpoint`` (remat) wrapped around the body according to cfg.remat.
+
+Block kinds:
+  attn       — global GQA attention + (masked) FFN      [dense/audio/vlm]
+  local_attn — sliding-window attention + FFN           [hybrid]
+  moe        — GQA attention + mixture-of-experts FFN   [moe]
+  rec        — RG-LRU recurrent block + FFN             [hybrid]
+  mlstm      — xLSTM matrix-memory block                [ssm]
+  slstm      — xLSTM scalar-memory block                [ssm]
+
+Three entry points:
+  forward(params, tokens/embeds)        — training graph (no caches)
+  prefill(params, tokens/embeds)        — forward + build decode caches
+  decode_step(params, cache, token,pos) — one-token serving step
+
+Masksembles (the paper's technique) rides through every FFN-bearing block
+via ``mask_ids``: fixed masks over hidden units, assigned per batch row.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, Segment
+from repro.core import masksembles
+from repro.models import layers, moe as moe_lib, rglru, xlstm
+
+Params = dict[str, Any]
+
+__all__ = ["init", "forward", "prefill", "decode_step", "init_cache",
+           "cache_specs"]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _block_init(kind: str, cfg: ModelConfig, key, dtype) -> Params:
+    d = cfg.d_model
+    if kind in ("attn", "local_attn", "moe"):
+        k1, k2 = jax.random.split(key)
+        p: Params = {
+            "norm1": layers.norm_init(d, cfg.norm, dtype),
+            "attn": layers.attn_init(k1, cfg, dtype),
+            "norm2": layers.norm_init(d, cfg.norm, dtype),
+        }
+        if kind == "moe":
+            p["moe"] = moe_lib.moe_init(k2, cfg, dtype)
+        else:
+            p["ffn"] = layers.ffn_init(k2, cfg, dtype=dtype)
+        return p
+    if kind == "rec":
+        k1, k2 = jax.random.split(key)
+        return {
+            "norm1": layers.norm_init(d, cfg.norm, dtype),
+            "rec": rglru.rec_block_init(k1, cfg, dtype),
+            "norm2": layers.norm_init(d, cfg.norm, dtype),
+            "ffn": layers.ffn_init(k2, cfg, dtype=dtype),
+        }
+    if kind == "mlstm":
+        return xlstm.mlstm_block_init(key, cfg, dtype)
+    if kind == "slstm":
+        return xlstm.slstm_block_init(key, cfg, dtype)
+    raise ValueError(f"unknown block kind {kind}")
+
+
+def init(cfg: ModelConfig, key) -> Params:
+    """Full parameter pytree. Segment params are stacked over reps (leading
+    axis = reps) so the stack scans."""
+    dtype = cfg.dtype
+    keys = jax.random.split(key, len(cfg.segments()) + 1)
+    params: Params = {"embed": layers.embed_init(keys[-1], cfg, dtype),
+                      "final_norm": layers.norm_init(cfg.d_model, cfg.norm,
+                                                     dtype),
+                      "segments": []}
+
+    for seg, kseg in zip(cfg.segments(), keys):
+        rep_keys = jax.random.split(kseg, seg.reps)
+
+        def init_rep(k):
+            bkeys = jax.random.split(k, len(seg.pattern))
+            return {f"b{i}": _block_init(kind, cfg, bk, dtype)
+                    for i, (kind, bk) in enumerate(zip(seg.pattern, bkeys))}
+
+        reps = [init_rep(k) for k in rep_keys]
+        params["segments"].append(
+            jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+            if len(reps) > 1 else jax.tree.map(lambda x: x[None], reps[0]))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _block_cache_spec(kind: str, cfg: ModelConfig, batch: int, max_seq: int,
+                      dtype, as_spec: bool):
+    dh = cfg.resolved_head_dim
+    mk_kv = layers.kv_cache_specs if as_spec else layers.init_kv_cache
+    if kind in ("attn", "moe"):
+        return mk_kv(batch, cfg.n_kv_heads, max_seq, dh, dtype)
+    if kind == "local_attn":
+        w = min(cfg.local_window or max_seq, max_seq)
+        return mk_kv(batch, cfg.n_kv_heads, w, dh, dtype)
+    if kind == "rec":
+        fn = rglru.rec_state_specs if as_spec else rglru.rec_state_init
+        return fn(batch, cfg, dtype)
+    if kind == "mlstm":
+        fn = xlstm.mlstm_state_specs if as_spec else xlstm.mlstm_state_init
+        return fn(batch, cfg, dtype)
+    if kind == "slstm":
+        fn = xlstm.slstm_state_specs if as_spec else xlstm.slstm_state_init
+        return fn(batch, cfg, dtype)
+    raise ValueError(kind)
+
+
+def _cache_tree(cfg: ModelConfig, batch: int, max_seq: int, as_spec: bool):
+    dtype = cfg.dtype
+    out = []
+    for seg in cfg.segments():
+        one = {f"b{i}": _block_cache_spec(kind, cfg, batch, max_seq, dtype,
+                                          as_spec)
+               for i, kind in enumerate(seg.pattern)}
+        if as_spec:
+            stacked = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((seg.reps,) + s.shape,
+                                               s.dtype), one)
+        else:
+            stacked = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (seg.reps,) + x.shape),
+                one)
+        out.append(stacked)
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    return _cache_tree(cfg, batch, max_seq, as_spec=False)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    return _cache_tree(cfg, batch, max_seq, as_spec=True)
+
+
+# ---------------------------------------------------------------------------
+# rope helpers
+# ---------------------------------------------------------------------------
+
+def _rope(cfg: ModelConfig, positions: jax.Array):
+    """positions [S] or [B,S] (or [3,...] for M-RoPE) -> cos/sin shaped
+    [..., S, half] broadcastable against [B, H, S, dh]."""
+    dh = cfg.resolved_head_dim
+    rot = int(dh * cfg.rope_pct)
+    rot -= rot % 2
+    if cfg.m_rope_sections:
+        if positions.ndim == 1 or positions.shape[0] != 3:
+            positions = jnp.broadcast_to(positions, (3,) + positions.shape)
+        cos, sin = layers.mrope_cos_sin(positions, rot, cfg.rope_theta,
+                                        cfg.m_rope_sections)
+    else:
+        cos, sin = layers.rope_cos_sin(positions, rot, cfg.rope_theta)
+    # insert head axis
+    if cos.ndim == 2:          # [S, half] -> [1, 1, S, half]
+        cos, sin = cos[None, None], sin[None, None]
+    else:                      # [B, S, half] -> [B, 1, S, half]
+        cos, sin = cos[:, None], sin[:, None]
+    return cos, sin
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _attention_sublayer(cfg: ModelConfig, p: Params, x: jax.Array, rope,
+                        mode: str, kind: str, cache, pos):
+    """Shared attention sub-layer for attn/local_attn/moe blocks."""
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    xn = layers.norm_apply(p["norm1"], x, cfg.norm)
+    q = layers._split_heads(layers.dense(p["attn"]["wq"], xn), h)
+    k = layers._split_heads(layers.dense(p["attn"]["wk"], xn), hkv)
+    v = layers._split_heads(layers.dense(p["attn"]["wv"], xn), hkv)
+    cos, sin = rope
+    q = layers.apply_rope(q, cos, sin, cfg.rope_pct)
+    k = layers.apply_rope(k, cos, sin, cfg.rope_pct)
+    # Activation-sharding policy (GSPMD hints; identity without a mesh):
+    # * seq_shard (sequence parallelism): queries stay sequence-sharded
+    #   (so attention output lands back on the S-sharded residual with no
+    #   re-shard) and the small GQA K/V are gathered to full sequence;
+    # * else head-TP when the head counts divide the model axis
+    #   (Megatron-style, attention fully local), otherwise shard the KV
+    #   sequence dim over "model" (distributed-softmax attention).
+    msize = layers.axis_size("model")
+    if mode != "decode":
+        if cfg.seq_shard:
+            # sequence-sharded queries + fully gathered (small, GQA) K/V.
+            # NOTE a head-TP variant (q/k/v re-sharded onto heads) was tried
+            # and REFUTED: GSPMD lowers the S->H re-shard of the projection
+            # outputs as replicate+slice, 4x-ing the all-gather bytes
+            # (EXPERIMENTS §Perf, qwen2-vl iteration 2).
+            q = layers.constrain(q, ("batch", None, "model", None))
+            k = layers.constrain(k, ("batch", None, None, None))
+            v = layers.constrain(v, ("batch", None, None, None))
+        elif h % msize == 0 and hkv % msize == 0:
+            q = layers.constrain(q, ("batch", "model", None, None))
+            k = layers.constrain(k, ("batch", "model", None, None))
+            v = layers.constrain(v, ("batch", "model", None, None))
+        else:
+            q = layers.constrain(q, ("batch", None, None, None))
+            k = layers.constrain(k, ("batch", None, "model", None))
+            v = layers.constrain(v, ("batch", None, "model", None))
+
+    window = cfg.local_window if kind == "local_attn" else 0
+    new_cache = None
+    if mode == "decode":
+        new_cache = layers.kv_cache_update(cache, k, v, pos, window)
+        attn = layers.attention_decode(q, new_cache["k"], new_cache["v"],
+                                       new_cache["kpos"], pos)
+    else:
+        s = x.shape[1]
+        if window and s > window:
+            attn = layers.attention_banded(q, k, v, window=window,
+                                           unroll=cfg.analysis_unroll)
+        elif s > cfg.attn_chunk and cfg.causal:
+            attn = layers.attention_chunked(q, k, v, causal=True,
+                                            chunk=cfg.attn_chunk,
+                                            scores_f32=cfg.attn_scores_f32,
+                                            unroll=cfg.analysis_unroll)
+        else:
+            attn = layers.attention_full(q, k, v, causal=cfg.causal,
+                                         window=window,
+                                         scores_f32=cfg.attn_scores_f32)
+        if mode == "prefill":
+            if window and s >= window:
+                # rolling cache invariant: slot = pos % window
+                roll = s % window
+                ks = jnp.roll(k[:, :, -window:], roll, axis=2)
+                vs = jnp.roll(v[:, :, -window:], roll, axis=2)
+                kpos = jnp.roll(jnp.arange(s - window, s, dtype=jnp.int32),
+                                roll)
+            else:
+                smax = cache["k"].shape[2] if cache is not None else s
+                pad = smax - s
+                ks = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                vs = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                kpos = jnp.concatenate([jnp.arange(s, dtype=jnp.int32),
+                                        jnp.full((pad,), -1, jnp.int32)])
+            new_cache = {"k": ks, "v": vs, "kpos": kpos}
+    return x + layers.dense(p["attn"]["wo"], layers._merge_heads(attn)), \
+        new_cache
+
+
+def _block_apply(kind: str, cfg: ModelConfig, p: Params, x: jax.Array, *,
+                 mode: str, rope, mask_ids, cache=None, pos=None):
+    """x: [B,S,D] (train/prefill) or [B,1,D] (decode).
+    Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    seqp = ("batch", "model", None) if (cfg.seq_shard and mode != "decode") \
+        else None
+    if kind in ("attn", "local_attn", "moe"):
+        x, new_cache = _attention_sublayer(cfg, p, x, rope, mode, kind,
+                                           cache, pos)
+        if seqp:
+            x = layers.constrain(x, seqp)
+        xn = layers.norm_apply(p["norm2"], x, cfg.norm)
+        if kind == "moe":
+            if seqp and not cfg.moe_local_groups:
+                # MoE grouping crosses sequence-shard boundaries: gather the
+                # normed input to full S for routing, re-scatter the output
+                # ([B,S,D] bf16 — far cheaper than the per-layer f32 thrash
+                # it replaces; see EXPERIMENTS §Perf arctic iteration 1).
+                # With moe_local_groups the groups nest inside sequence
+                # shards instead and no gather happens (arctic iteration 3).
+                xn = layers.constrain(xn, ("batch", None, None))
+            y, aux = moe_lib.moe_apply(p["moe"], xn, cfg, mask_ids=mask_ids)
+        else:
+            y = layers.ffn_apply(p["ffn"], xn, cfg, mask_ids=mask_ids)
+        out = x + y
+        if seqp:
+            out = layers.constrain(out, seqp)
+        return out, new_cache, aux
+
+    if kind == "rec":
+        xn = layers.norm_apply(p["norm1"], x, cfg.norm)
+        if mode == "decode":
+            y, new_cache = rglru.rec_block_step(p["rec"], xn[:, 0], cache,
+                                                cfg)
+            y = y[:, None, :]
+        else:
+            y, new_cache = rglru.rec_block_apply(p["rec"], xn, cfg)
+            if mode == "train":
+                new_cache = None
+        x = x + y
+        xn2 = layers.norm_apply(p["norm2"], x, cfg.norm)
+        return x + layers.ffn_apply(p["ffn"], xn2, cfg, mask_ids=mask_ids), \
+            new_cache, aux
+
+    if kind in ("mlstm", "slstm"):
+        mod = xlstm.mlstm_block_step if kind == "mlstm" else \
+            xlstm.slstm_block_step
+        par = xlstm.mlstm_block_apply if kind == "mlstm" else \
+            xlstm.slstm_block_apply
+        if mode == "decode":
+            y, new_cache = mod(p, x[:, 0], cache, cfg, mask_ids=mask_ids)
+            y = y[:, None, :]
+        else:
+            y, new_cache = par(p, x, cfg, mask_ids=mask_ids)
+            if mode == "train":
+                new_cache = None
+        return x + y, new_cache, aux
+
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# stack execution
+# ---------------------------------------------------------------------------
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def _run_stack(cfg: ModelConfig, params: Params, x: jax.Array, *, mode: str,
+               rope, mask_ids, caches=None, pos=None):
+    """Run every segment. Returns (x, new_caches, total_aux)."""
+    new_caches = []
+    total_aux = jnp.zeros((), jnp.float32)
+    for si, seg in enumerate(cfg.segments()):
+        seg_params = params["segments"][si]
+        seg_cache = caches[si] if caches is not None else None
+        want_cache = mode != "train"
+
+        def rep_body(carry, xs, seg=seg):
+            h, aux = carry
+            rp, rc = xs
+            new_rc = {}
+            for i, kind in enumerate(seg.pattern):
+                bc = rc[f"b{i}"] if rc is not None else None
+                h, nc, a = _block_apply(kind, cfg, rp[f"b{i}"], h, mode=mode,
+                                        rope=rope, mask_ids=mask_ids,
+                                        cache=bc, pos=pos)
+                aux = aux + a
+                if nc is not None:
+                    new_rc[f"b{i}"] = nc
+            return (h, aux), (new_rc if new_rc else None)
+
+        if cfg.scan_layers and seg.reps > 1:
+            body = _remat(cfg, rep_body)
+            (x, total_aux), seg_new_cache = jax.lax.scan(
+                body, (x, total_aux),
+                (seg_params, seg_cache))
+        else:
+            body = _remat(cfg, rep_body)
+            outs = []
+            for r in range(seg.reps):
+                rp = jax.tree.map(lambda a, r=r: a[r], seg_params)
+                rc = (jax.tree.map(lambda a, r=r: a[r], seg_cache)
+                      if seg_cache is not None else None)
+                (x, total_aux), oc = body((x, total_aux), (rp, rc))
+                outs.append(oc)
+            seg_new_cache = (jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+                             if want_cache and outs[0] is not None else None)
+        new_caches.append(seg_new_cache if want_cache else None)
+    return x, new_caches, total_aux
+
+
+def _positions_default(cfg: ModelConfig, batch: int, seq: int):
+    pos = jnp.arange(seq, dtype=jnp.int32)
+    if cfg.m_rope_sections:
+        pos = jnp.broadcast_to(pos, (3, seq))
+    return pos
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def pack_ffn_params(cfg: ModelConfig, params: Params) -> Params:
+    """Checkpoint conversion: trained masked-FFN weights -> per-sample packed
+    serving weights (mask-zero skipping, paper §V-C / Fig. 4).
+
+    Only dense gated/plain FFN blocks are packed (MoE experts and the
+    recurrent-family block-internal masks keep the multiply form). Use with
+    ``dataclasses.replace(cfg, packed_ffn_serving=True)``; numerically exact
+    vs the masked form (tests/test_models_smoke.py)."""
+    import numpy as np
+
+    from repro.core import packing
+
+    def pack_ffn(ffn: Params) -> Params:
+        masks = np.asarray(jax.device_get(ffn["masks"][0]), bool)  # [N, F]
+        idx = packing.kept_indices(masks)                          # [N, K]
+        out = {}
+        if "wg" in ffn:
+            out["wgp"] = jnp.stack(
+                [jnp.take(ffn["wg"]["w"], idx[i], axis=-1)
+                 for i in range(idx.shape[0])], axis=1)            # [R,N,D,K]
+        out["wup"] = jnp.stack(
+            [jnp.take(ffn["wu"]["w"], idx[i], axis=-1)
+             for i in range(idx.shape[0])], axis=1)
+        out["wdp"] = jnp.stack(
+            [jnp.take(ffn["wd"]["w"], idx[i], axis=-2)
+             for i in range(idx.shape[0])], axis=1)                # [R,N,K,D]
+        return out
+
+    new = jax.tree.map(lambda x: x, params)  # shallow-ish copy
+    for si, seg in enumerate(new["segments"]):
+        for bk, block in seg.items():
+            if isinstance(block, dict) and "ffn" in block and \
+                    "masks" in block["ffn"]:
+                block["ffn"] = pack_ffn(block["ffn"])
+    return new
+
+
+def _embed_in(cfg: ModelConfig, params: Params, batch: Params) -> jax.Array:
+    if "embeds" in batch:
+        x = batch["embeds"].astype(cfg.dtype)
+    else:
+        x = layers.embed_tokens(params["embed"], batch["tokens"])
+    # residual stream: batch-sharded; sequence-sharded over "model" too
+    # under sequence parallelism
+    if cfg.seq_shard:
+        return layers.constrain(x, ("batch", "model", None))
+    return layers.constrain(x, ("batch", None, None))
+
+
+def forward(cfg: ModelConfig, params: Params, batch: Params,
+            mask_ids: jax.Array | None = None):
+    """Training/eval graph: batch {tokens|embeds [B,S,*]} -> (logits
+    [B,S,V], aux_loss). If cfg is Bayesian and mask_ids is None, the
+    Masksembles batch-group assignment is used (training form)."""
+    x = _embed_in(cfg, params, batch)
+    b, s = x.shape[:2]
+    if cfg.bayesian and mask_ids is None:
+        mask_ids = masksembles.mask_ids_for_batch(b, cfg.mask_samples)
+    pos = batch.get("positions", _positions_default(cfg, b, s))
+    rope = _rope(cfg, pos)
+    x, _, aux = _run_stack(cfg, params, x, mode="train", rope=rope,
+                           mask_ids=mask_ids)
+    if cfg.seq_shard:
+        # one bf16 gather of the final hidden state instead of per-shard
+        # partial logits thrash (EXPERIMENTS §Perf qwen2-vl iteration 4)
+        x = layers.constrain(x, ("batch", None, None))
+    x = layers.norm_apply(params["final_norm"], x, cfg.norm)
+    return layers.lm_head(params["embed"], x), aux
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Params,
+            max_seq: int | None = None,
+            mask_ids: jax.Array | None = None):
+    """Prefill: consume the prompt, return (last-token logits [B,V], caches).
+
+    max_seq sizes the KV caches (defaults to prompt length)."""
+    x = _embed_in(cfg, params, batch)
+    b, s = x.shape[:2]
+    if cfg.bayesian and mask_ids is None:
+        mask_ids = masksembles.mask_ids_for_batch(b, cfg.mask_samples)
+    max_seq = max_seq or s
+    caches = init_cache(cfg, b, max_seq)
+    pos = batch.get("positions", _positions_default(cfg, b, s))
+    rope = _rope(cfg, pos)
+    x, new_caches, _ = _run_stack(cfg, params, x, mode="prefill", rope=rope,
+                                  mask_ids=mask_ids, caches=caches)
+    x = layers.norm_apply(params["final_norm"], x[:, -1:, :], cfg.norm)
+    return layers.lm_head(params["embed"], x)[:, 0], new_caches
+
+
+def decode_step(cfg: ModelConfig, params: Params, caches, tokens: jax.Array,
+                pos: jax.Array, mask_ids: jax.Array | None = None):
+    """One serving step: tokens [B,1] + caches @ pos -> (logits [B,V],
+    new caches)."""
+    x = layers.embed_tokens(params["embed"], tokens)
+    b = x.shape[0]
+    if cfg.bayesian and mask_ids is None:
+        mask_ids = masksembles.mask_ids_for_batch(b, cfg.mask_samples)
+    p = jnp.asarray(pos, jnp.int32)
+    pos_arr = p[None] if not cfg.m_rope_sections else \
+        jnp.broadcast_to(p, (3, 1))
+    rope = _rope(cfg, pos_arr)
+    x, new_caches, _ = _run_stack(cfg, params, x, mode="decode", rope=rope,
+                                  mask_ids=mask_ids, caches=caches, pos=p)
+    x = layers.norm_apply(params["final_norm"], x, cfg.norm)
+    return layers.lm_head(params["embed"], x)[:, 0], new_caches

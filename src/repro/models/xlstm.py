@@ -1,0 +1,350 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): mLSTM + sLSTM.
+
+mLSTM — matrix-memory LSTM with exponential gating:
+    i_t = exp(i~_t),  f_t = sigmoid(f~_t)
+    C_t = f_t C_{t-1} + i_t k_t v_t^T        (matrix memory, per head)
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = (q_t^T C_t) / max(|q_t . n_t|, exp(-m_t))   (m_t = log-scale stabilizer)
+
+TPU adaptation — **chunkwise-parallel** execution instead of the GPU
+reference's fused sequential kernel: the sequence is cut into chunks of
+``chunk_size``; within a chunk the contribution is a masked [C, C] matmul
+(MXU-friendly, attention-like), across chunks a small state recurrence
+carries (C_state, n_state, m_state). Both the intra weights and the carried
+state are stabilized in log-space with the running max m (exact, not an
+approximation — algebra in the docstrings below). Cost is O(S*C*dh) + O(S/C)
+sequential steps vs O(S) for the naive scan. Decode is the O(1) recurrence,
+which is why the ssm family runs the long_500k cell.
+
+sLSTM — scalar-memory LSTM with exponential gating and a block-diagonal
+(per-head) recurrent matrix; inherently sequential (h_{t-1} feeds the gates),
+executed as a lax.scan over time.
+
+Block structure follows the paper at pf=2 (mLSTM) with block-diagonal q/k/v
+projections per head; the causal depthwise conv of the reference block is
+omitted (documented simplification, DESIGN §Arch notes).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks as masks_lib
+from repro.models import layers
+
+Params = dict[str, Any]
+
+__all__ = ["mlstm_block_init", "mlstm_block_apply", "mlstm_block_step",
+           "mlstm_state_init", "mlstm_state_specs",
+           "slstm_block_init", "slstm_block_apply", "slstm_block_step",
+           "slstm_state_init", "slstm_state_specs"]
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_chunk(q, k, v, igate, fgate, carry, *, eps=1e-6):
+    """One chunk. q/k/v [B,H,C,dh] (k pre-scaled by 1/sqrt(dh)),
+    igate/fgate preactivations [B,H,C]; carry = (C_state [B,H,dh,dh],
+    n_state [B,H,dh], m_state [B,H]).
+
+    With F_j = cumsum(log sigmoid(f~))_j (inclusive) and a_t = i~_t - F_t:
+      per-position stabilizer  m*_j = F_j + M_j,  M_j = max(m_prev, cummax a)
+      intra weights            D_jt = exp(a_t - M_j) [t <= j]
+      inter coefficient        c_j  = exp(m_prev - M_j)
+      state update             C' = e^{m_prev - M_L} C + sum_t e^{a_t - M_L} k_t v_t^T
+                               m' = F_L + M_L
+    (the F_j terms cancel inside D — only the cummax survives).
+    """
+    c_state, n_state, m_state = carry
+    lf = jax.nn.log_sigmoid(fgate.astype(jnp.float32))          # [B,H,C]
+    F = jnp.cumsum(lf, axis=-1)
+    a = igate.astype(jnp.float32) - F                           # [B,H,C]
+    g = jax.lax.cummax(a, axis=2)
+    M = jnp.maximum(m_state[..., None], g)                      # [B,H,C]
+
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    s = jnp.einsum("bhqd,bhtd->bhqt", qf, kf)                   # [B,H,C,C]
+    cc = q.shape[2]
+    tri = jnp.tril(jnp.ones((cc, cc), bool))
+    d_w = jnp.where(tri, jnp.exp(a[:, :, None, :] - M[..., None]), 0.0)
+    sw = s * d_w                                                # weighted scores
+    num_intra = jnp.einsum("bhqt,bhtd->bhqd", sw, vf)
+    den_intra = jnp.sum(sw, axis=-1)                            # [B,H,C]
+
+    c_j = jnp.exp(m_state[..., None] - M)                       # [B,H,C]
+    num_inter = jnp.einsum("bhqd,bhde->bhqe", qf, c_state) * c_j[..., None]
+    den_inter = jnp.einsum("bhqd,bhd->bhq", qf, n_state) * c_j
+
+    m_star = F + M
+    den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_star)) + eps
+    h = (num_intra + num_inter) / den[..., None]                # [B,H,C,dh]
+
+    # ---- carry update -------------------------------------------------------
+    M_L = M[..., -1]                                            # [B,H]
+    w_t = jnp.exp(a - M_L[..., None])                           # [B,H,C]
+    decay = jnp.exp(m_state - M_L)                              # [B,H]
+    c_new = (decay[..., None, None] * c_state
+             + jnp.einsum("bht,bhtd,bhte->bhde", w_t, kf, vf))
+    n_new = decay[..., None] * n_state + jnp.einsum("bht,bhtd->bhd", w_t, kf)
+    m_new = F[..., -1] + M_L
+    return h, (c_new, n_new, m_new)
+
+
+def mlstm_parallel(q, k, v, igate, fgate, carry, chunk: int,
+                   unroll: bool = False):
+    """Full-sequence chunkwise mLSTM. q/k/v [B,H,S,dh] -> (h, carry).
+    unroll=True replaces the chunk scan with a python loop (cost-probe
+    configs: XLA counts a while body once regardless of trip count)."""
+    b, h, s, dh = q.shape
+    if s % chunk or s == 0:
+        chunk = s
+    nc = s // chunk
+
+    def split(x):
+        return x.reshape(b, h, nc, chunk, *x.shape[3:]).transpose(
+            2, 0, 1, 3, *range(4, x.ndim + 1))
+
+    qs, ks, vs = split(q), split(k), split(v)
+    igs = igate.reshape(b, h, nc, chunk).transpose(2, 0, 1, 3)
+    fgs = fgate.reshape(b, h, nc, chunk).transpose(2, 0, 1, 3)
+
+    def body(carry, xs):
+        qi, ki, vi, ii, fi = xs
+        out, carry = _mlstm_chunk(qi, ki, vi, ii, fi, carry)
+        return carry, out
+
+    if unroll:
+        outs_l = []
+        for i in range(nc):
+            carry, out = body(carry, (qs[i], ks[i], vs[i], igs[i], fgs[i]))
+            outs_l.append(out)
+        outs = jnp.stack(outs_l)
+    else:
+        carry, outs = jax.lax.scan(body, carry, (qs, ks, vs, igs, fgs))
+    hh = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, s, dh)
+    return hh, carry
+
+
+def mlstm_step(q, k, v, igate, fgate, carry, *, eps=1e-6):
+    """O(1) decode step. q/k/v [B,H,dh], gates [B,H]."""
+    c_state, n_state, m_state = carry
+    lf = jax.nn.log_sigmoid(fgate.astype(jnp.float32))
+    ig = igate.astype(jnp.float32)
+    m_new = jnp.maximum(lf + m_state, ig)
+    fw = jnp.exp(lf + m_state - m_new)
+    iw = jnp.exp(ig - m_new)
+    kf, vf, qf = (x.astype(jnp.float32) for x in (k, v, q))
+    c_new = (fw[..., None, None] * c_state
+             + iw[..., None, None] * kf[..., :, None] * vf[..., None, :])
+    n_new = fw[..., None] * n_state + iw[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new)),
+                      jnp.exp(-m_new)) + eps
+    return num / den[..., None], (c_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def _block_diag_init(key, h: int, din: int, dout: int, dtype):
+    return (jax.random.normal(key, (h, din, dout), jnp.float32)
+            / math.sqrt(din)).astype(dtype)
+
+
+def mlstm_block_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    pd = int(cfg.xlstm_pf * d)
+    h = cfg.n_heads
+    pdh = pd // h
+    ku, kg, kq, kk, kv, kgate, kd = jax.random.split(key, 7)
+    p: Params = {
+        "norm": layers.norm_init(d, "rmsnorm", dtype),
+        "wu": layers.dense_init(ku, d, pd, dtype),       # up (cell input)
+        "wg": layers.dense_init(kg, d, pd, dtype),       # up (output gate)
+        "wq": _block_diag_init(kq, h, pdh, pdh, dtype),  # per-head q/k/v
+        "wk": _block_diag_init(kk, h, pdh, pdh, dtype),
+        "wv": _block_diag_init(kv, h, pdh, pdh, dtype),
+        "wif": layers.dense_init(kgate, d, 2 * h, dtype, bias=True),
+        "hnorm": layers.norm_init(pd, "rmsnorm", dtype),
+        "wd": layers.dense_init(kd, pd, d, dtype, scale=1.0 / math.sqrt(pd)),
+    }
+    if cfg.bayesian:
+        spec = masks_lib.MaskSpec(width=pd, n_masks=cfg.mask_samples,
+                                  scale=cfg.mask_scale, seed=cfg.mask_seed)
+        p["masks"] = jnp.asarray(masks_lib.generate_masks(spec), dtype)
+    return p
+
+
+def _mlstm_qkv(p: Params, x: jax.Array, cfg):
+    """x [B,S,D] -> q/k/v [B,H,S,pdh], gates [B,H,S]."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    z = layers.dense(p["wu"], x)                       # [B,S,pd]
+    zh = z.reshape(b, s, h, -1).transpose(0, 2, 1, 3)  # [B,H,S,pdh]
+    q = jnp.einsum("bhsd,hde->bhse", zh, p["wq"])
+    k = jnp.einsum("bhsd,hde->bhse", zh, p["wk"]) / math.sqrt(zh.shape[-1])
+    v = jnp.einsum("bhsd,hde->bhse", zh, p["wv"])
+    gates = layers.dense(p["wif"], x)                  # [B,S,2H]
+    ig = gates[..., :h].transpose(0, 2, 1)             # [B,H,S]
+    fg = gates[..., h:].transpose(0, 2, 1) + 3.0       # forget bias -> ~1
+    return q, k, v, ig, fg
+
+
+def _mlstm_out(p: Params, x, h_cell, cfg, mask_ids):
+    b, hh, s, pdh = h_cell.shape
+    hm = h_cell.transpose(0, 2, 1, 3).reshape(b, s, hh * pdh)
+    hm = layers.norm_apply(p["hnorm"], hm, "rmsnorm")
+    gate = jax.nn.silu(layers.dense(p["wg"], x))
+    hm = hm * gate
+    if mask_ids is not None and "masks" in p:
+        hm = hm * p["masks"][mask_ids][:, None, :]
+    return layers.dense(p["wd"], hm)
+
+
+def mlstm_state_init(batch: int, cfg, dtype) -> Params:
+    h = cfg.n_heads
+    pdh = int(cfg.xlstm_pf * cfg.d_model) // h
+    return {"C": jnp.zeros((batch, h, pdh, pdh), jnp.float32),
+            "n": jnp.zeros((batch, h, pdh), jnp.float32),
+            "m": jnp.full((batch, h), _NEG, jnp.float32)}
+
+
+def mlstm_state_specs(batch: int, cfg, dtype) -> Params:
+    h = cfg.n_heads
+    pdh = int(cfg.xlstm_pf * cfg.d_model) // h
+    return {"C": jax.ShapeDtypeStruct((batch, h, pdh, pdh), jnp.float32),
+            "n": jax.ShapeDtypeStruct((batch, h, pdh), jnp.float32),
+            "m": jax.ShapeDtypeStruct((batch, h), jnp.float32)}
+
+
+def mlstm_block_apply(p: Params, x: jax.Array, cfg,
+                      mask_ids=None) -> tuple[jax.Array, Params]:
+    """Prefill: x [B,S,D] -> (y, final state). Residual added by caller."""
+    xn = layers.norm_apply(p["norm"], x, "rmsnorm")
+    q, k, v, ig, fg = _mlstm_qkv(p, xn, cfg)
+    st = mlstm_state_init(x.shape[0], cfg, x.dtype)
+    h_cell, (c, n, m) = mlstm_parallel(q, k, v, ig, fg,
+                                       (st["C"], st["n"], st["m"]),
+                                       cfg.chunk_size,
+                                       unroll=cfg.analysis_unroll)
+    y = _mlstm_out(p, xn, h_cell.astype(x.dtype), cfg, mask_ids)
+    return y, {"C": c, "n": n, "m": m}
+
+
+def mlstm_block_step(p: Params, x: jax.Array, state: Params, cfg,
+                     mask_ids=None) -> tuple[jax.Array, Params]:
+    """Decode: x [B,D] -> (y [B,D], new state)."""
+    xn = layers.norm_apply(p["norm"], x[:, None, :], "rmsnorm")
+    q, k, v, ig, fg = _mlstm_qkv(p, xn, cfg)
+    h_cell, (c, n, m) = mlstm_step(q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                                   ig[:, :, 0], fg[:, :, 0],
+                                   (state["C"], state["n"], state["m"]))
+    y = _mlstm_out(p, xn, h_cell[:, :, None, :].astype(x.dtype), cfg,
+                   mask_ids)
+    return y[:, 0, :], {"C": c, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — scalar memory, sequential
+# ---------------------------------------------------------------------------
+
+
+def slstm_block_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    kw, kr, kd, ku = jax.random.split(key, 4)
+    p: Params = {
+        "norm": layers.norm_init(d, "rmsnorm", dtype),
+        # 4 gate preactivations from x: z, i, f, o
+        "wzifo": layers.dense_init(kw, d, 4 * d, dtype, bias=True),
+        # block-diagonal recurrent matrices per head, for all 4 gates
+        "rzifo": _block_diag_init(kr, h, dh, 4 * dh, dtype),
+        "hnorm": layers.norm_init(d, "rmsnorm", dtype),
+        "wd": layers.dense_init(kd, d, d, dtype),
+    }
+    if cfg.bayesian:
+        spec = masks_lib.MaskSpec(width=d, n_masks=cfg.mask_samples,
+                                  scale=cfg.mask_scale, seed=cfg.mask_seed)
+        p["masks"] = jnp.asarray(masks_lib.generate_masks(spec), dtype)
+    return p
+
+
+def slstm_state_init(batch: int, cfg, dtype) -> Params:
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "h": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.full((batch, d), _NEG, jnp.float32)}
+
+
+def slstm_state_specs(batch: int, cfg, dtype) -> Params:
+    d = cfg.d_model
+    return {k: jax.ShapeDtypeStruct((batch, d), jnp.float32)
+            for k in ("c", "n", "h", "m")}
+
+
+def _slstm_cell(p: Params, pre_x: jax.Array, state: Params, cfg):
+    """One timestep. pre_x [B, 4D] (input preactivations); state fp32."""
+    b = pre_x.shape[0]
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    hp = state["h"].reshape(b, h, dh).astype(p["rzifo"].dtype)
+    rec = jnp.einsum("bhd,hde->bhe", hp, p["rzifo"]).reshape(b, 4 * d)
+    pre = (pre_x + rec).astype(jnp.float32)
+    z, i, f, o = jnp.split(pre, 4, axis=-1)
+    m_new = jnp.maximum(jax.nn.log_sigmoid(f) + state["m"], i)
+    iw = jnp.exp(i - m_new)
+    fw = jnp.exp(jax.nn.log_sigmoid(f) + state["m"] - m_new)
+    c_new = fw * state["c"] + iw * jnp.tanh(z)
+    n_new = fw * state["n"] + iw
+    h_new = jax.nn.sigmoid(o) * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_block_apply(p: Params, x: jax.Array, cfg,
+                      mask_ids=None) -> tuple[jax.Array, Params]:
+    """Prefill: sequential lax.scan over time. x [B,S,D]."""
+    xn = layers.norm_apply(p["norm"], x, "rmsnorm")
+    pre = layers.dense(p["wzifo"], xn)                 # [B,S,4D]
+    state = slstm_state_init(x.shape[0], cfg, x.dtype)
+
+    def body(st, pre_t):
+        st = _slstm_cell(p, pre_t, st, cfg)
+        return st, st["h"]
+
+    # NOTE: stays a lax.scan even under analysis_unroll (unrolling S
+    # cells is compile-prohibitive); the dry-run adds the per-step cost
+    # analytically instead (launch.dryrun._slstm_step_cost).
+    state, hs = jax.lax.scan(body, state, pre.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2).astype(x.dtype)         # [B,S,D]
+    hs = layers.norm_apply(p["hnorm"], hs, "rmsnorm")
+    if mask_ids is not None and "masks" in p:
+        hs = hs * p["masks"][mask_ids][:, None, :]
+    return layers.dense(p["wd"], hs), state
+
+
+def slstm_block_step(p: Params, x: jax.Array, state: Params, cfg,
+                     mask_ids=None) -> tuple[jax.Array, Params]:
+    xn = layers.norm_apply(p["norm"], x[:, None, :], "rmsnorm")[:, 0]
+    pre = layers.dense(p["wzifo"], xn)
+    state = _slstm_cell(p, pre, state, cfg)
+    hs = layers.norm_apply(p["hnorm"], state["h"].astype(x.dtype), "rmsnorm")
+    if mask_ids is not None and "masks" in p:
+        hs = hs * p["masks"][mask_ids]
+    return layers.dense(p["wd"], hs), state

@@ -1,0 +1,2 @@
+from repro.serving.engine import (  # noqa: F401
+    ServeConfig, generate, serve_uncertain, uncertainty_decode_step)

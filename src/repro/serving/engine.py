@@ -1,0 +1,132 @@
+"""Serving engine: batched generation + mask-based Bayesian serving.
+
+``generate`` is the plain path (prefill -> greedy decode loop).
+
+``serve_uncertain`` is the paper's technique at LM scale: every request is
+evaluated under all N fixed Masksembles masks; the per-token prediction is
+the sample-mean distribution and the per-token uncertainty is the std of the
+sample log-probabilities. Two schedules exist, mirroring paper Fig. 5:
+
+  * sampling-level — expand the batch x N (each row pinned to one mask) and
+    decode the expanded batch: N x the KV cache, N x the weight traffic per
+    token *relative to batch* (the naive BayesNN baseline);
+  * batch-level    — decode the expanded batch but with the mask-sample as
+    the *outer* grid of the masked-FFN computation, weights touched once per
+    sample (the paper's scheme; realized in the packed Pallas kernel and,
+    in the XLA path, by the sample-major einsum in core/packing.py).
+
+The uncertainty signal gates generation: tokens whose relative uncertainty
+exceeds a threshold can be flagged for escalation (the paper's clinical
+"adopt more comprehensive examinations" pathway, §VI-B).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masksembles, uncertainty as unc_lib
+from repro.models.model import Model
+
+Params = dict[str, Any]
+
+__all__ = ["ServeConfig", "generate", "uncertainty_decode_step",
+           "serve_uncertain"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_new_tokens: int = 16
+    greedy: bool = True
+    uncertainty_threshold: float = 0.5   # flag tokens above this rel-unc
+
+
+def generate(model: Model, params: Params, tokens: jax.Array,
+             cfg: ServeConfig = ServeConfig()) -> jax.Array:
+    """Greedy generation: tokens [B, S] -> [B, S + max_new_tokens]."""
+    b, s = tokens.shape
+    max_seq = s + cfg.max_new_tokens
+    logits, cache = model.prefill(params, {"tokens": tokens},
+                                  max_seq=max_seq)
+    out = [jnp.argmax(logits, -1).astype(jnp.int32)]
+    for i in range(cfg.max_new_tokens - 1):
+        logits, cache = model.decode_step(params, cache, out[-1][:, None],
+                                          jnp.int32(s + i))
+        out.append(jnp.argmax(logits, -1).astype(jnp.int32))
+    return jnp.concatenate([tokens, jnp.stack(out, 1)], axis=1)
+
+
+def _expand_for_masks(x: jax.Array, n: int) -> jax.Array:
+    return jnp.tile(x, (n,) + (1,) * (x.ndim - 1))
+
+
+def uncertainty_decode_step(model: Model, params: Params, caches,
+                            tokens: jax.Array, pos: jax.Array):
+    """One Bayesian decode step on a mask-expanded batch [N*B, 1].
+
+    Row j uses mask j // B (contiguous groups). Returns
+    (mean_logprobs [B, V], rel_uncertainty [B], new caches).
+    """
+    n = model.cfg.mask_samples
+    nb = tokens.shape[0]
+    b = nb // n
+    mask_ids = jnp.repeat(jnp.arange(n), b)
+    logits, caches = model.decode_step(params, caches, tokens, pos) \
+        if not model.cfg.bayesian else \
+        _decode_with_ids(model, params, caches, tokens, pos, mask_ids)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    samples = logp.reshape(n, b, -1)
+    mean, std = unc_lib.predictive_moments(samples)
+    # summary uncertainty: std of the chosen-token logprob across samples
+    tok = jnp.argmax(mean, -1)
+    per_tok_std = jnp.take_along_axis(std, tok[:, None], -1)[:, 0]
+    per_tok_mean = jnp.take_along_axis(mean, tok[:, None], -1)[:, 0]
+    rel_unc = per_tok_std / jnp.maximum(jnp.abs(per_tok_mean), 1e-6)
+    return mean, rel_unc, caches
+
+
+def _decode_with_ids(model, params, caches, tokens, pos, mask_ids):
+    from repro.models import transformer
+    return transformer.decode_step(model.cfg, params, caches, tokens, pos,
+                                   mask_ids=mask_ids)
+
+
+def serve_uncertain(model: Model, params: Params, tokens: jax.Array,
+                    cfg: ServeConfig = ServeConfig()):
+    """Bayesian generation with per-token uncertainty.
+
+    Returns (generated [B, S+T], rel_uncertainty [B, T], flags [B, T]).
+    The whole request batch is expanded x N ONCE (prefill included) — the
+    batch-level weight-traffic argument then applies to every decode step.
+    """
+    if not model.cfg.bayesian:
+        raise ValueError("serve_uncertain requires mask_samples > 0")
+    n = model.cfg.mask_samples
+    b, s = tokens.shape
+    max_seq = s + cfg.max_new_tokens
+    xt = _expand_for_masks(tokens, n)                    # [N*B, S]
+    mask_ids = jnp.repeat(jnp.arange(n), b)
+    from repro.models import transformer
+    logits, caches = transformer.prefill(model.cfg, params, {"tokens": xt},
+                                         max_seq=max_seq, mask_ids=mask_ids)
+    outs, uncs = [], []
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    mean, _ = unc_lib.predictive_moments(logp.reshape(n, b, -1))
+    cur = jnp.argmax(mean, -1).astype(jnp.int32)
+    for i in range(cfg.max_new_tokens):
+        outs.append(cur)
+        if i == cfg.max_new_tokens - 1:
+            # still need the uncertainty of the last emitted token
+            pass
+        step_tok = _expand_for_masks(cur, n)[:, None]
+        mean, rel_unc, caches = uncertainty_decode_step(
+            model, params, caches, step_tok, jnp.int32(s + i))
+        uncs.append(rel_unc)
+        cur = jnp.argmax(mean, -1).astype(jnp.int32)
+    gen = jnp.concatenate([tokens, jnp.stack(outs, 1)], 1)
+    unc = jnp.stack(uncs, 1)
+    flags = unc > cfg.uncertainty_threshold
+    return gen, unc, flags

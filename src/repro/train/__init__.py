@@ -1,0 +1,3 @@
+from repro.train.trainer import (  # noqa: F401
+    TrainConfig, Trainer, make_train_step, train_state_init,
+    train_state_specs)

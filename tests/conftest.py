@@ -1,0 +1,7 @@
+# NOTE: no XLA_FLAGS here — tests must see exactly 1 CPU device. Multi-device
+# behaviour is tested via subprocesses (tests/test_distributed.py) that set
+# --xla_force_host_platform_device_count themselves.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,59 @@
+"""Mask-generation invariants I1-I4 (property-based) — the foundation of the
+paper's technique: packing is only exact because every mask keeps exactly K
+units and stays fixed."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masks as M
+
+
+@given(width=st.integers(4, 200), n=st.integers(1, 16),
+       scale=st.floats(1.0, 4.0), seed=st.integers(0, 2**16))
+@settings(max_examples=60, deadline=None)
+def test_invariants(width, n, scale, seed):
+    spec = M.MaskSpec(width=width, n_masks=n, scale=scale, seed=seed)
+    masks = M.generate_masks(spec)
+    # I1: shape/dtype
+    assert masks.shape == (n, width) and masks.dtype == bool
+    # I2: uniform K
+    counts = masks.sum(axis=1)
+    assert (counts == spec.keep).all(), counts
+    # I3: coverage when feasible
+    if spec.keep * n >= width:
+        assert masks.any(axis=0).all()
+
+
+def test_scale_one_is_identity():
+    masks = M.generate_masks(M.MaskSpec(width=32, n_masks=4, scale=1.0))
+    assert masks.all()
+
+
+def test_masks_distinct_and_decorrelated():
+    masks = M.generate_masks(M.MaskSpec(width=128, n_masks=8, scale=2.0))
+    # I4: pairwise distinct
+    as_tuples = {tuple(m) for m in masks}
+    assert len(as_tuples) == 8
+    iou = M.mask_overlap_matrix(masks)
+    off_diag = iou[~np.eye(8, dtype=bool)]
+    assert off_diag.mean() < 0.75  # less correlated than near-identical
+
+
+def test_keep_rate_matches_masksembles_formula():
+    # s=2, n=4: keep = 1/(2*(1-0.5^4)) = 0.5333...
+    assert M.keep_rate(4, 2.0) == pytest.approx(1 / (2 * (1 - 0.5 ** 4)))
+    assert M.keep_rate(4, 1.0) == 1.0
+
+
+def test_rotation_fallback_uniform_and_covering():
+    masks = M.generate_masks_rotation(31, 5, keep=9, seed=3)
+    assert (masks.sum(1) == 9).all()
+    assert masks.any(axis=0).all()
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        M.MaskSpec(width=0, n_masks=4, scale=2.0)
+    with pytest.raises(ValueError):
+        M.MaskSpec(width=8, n_masks=4, scale=0.5)

@@ -1,0 +1,98 @@
+"""Mask-zero skipping exactness + batch-level schedule equivalence —
+the paper's two hardware optimizations must be *numerically identical* to
+the unpacked, sampling-level baseline."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masks as M, masksembles, packing, scheduler
+
+
+def _setup(width, n, d_in, d_out, seed=0):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    w1 = jax.random.normal(k1, (d_in, width)) * 0.3
+    b1 = jax.random.normal(k2, (width,)) * 0.1
+    w2 = jax.random.normal(k3, (width, d_out)) * 0.3
+    b2 = jnp.zeros((d_out,))
+    masks = M.generate_masks(M.MaskSpec(width=width, n_masks=n, scale=2.0,
+                                        seed=seed))
+    return w1, b1, w2, b2, masks
+
+
+@given(width=st.integers(8, 64), n=st.sampled_from([2, 4, 8]),
+       d_in=st.integers(3, 17), batch=st.integers(1, 9))
+@settings(max_examples=25, deadline=None)
+def test_packed_equals_masked(width, n, d_in, batch):
+    w1, b1, w2, b2, masks = _setup(width, n, d_in, 5)
+    x = jax.random.normal(jax.random.PRNGKey(42), (batch, d_in))
+    packed = packing.pack_masked_ffn(w1, b1, w2, b2, masks)
+    got = packing.packed_ffn_apply(packed, x)              # [n, B, 5]
+    mask_f = jnp.asarray(masks, jnp.float32)
+    want = jnp.stack([
+        (jax.nn.relu(x @ w1 + b1) * mask_f[i]) @ w2 + b2
+        for i in range(n)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_packed_shapes_shrink_by_keep():
+    w1, b1, w2, b2, masks = _setup(64, 4, 11, 7)
+    keep = int(masks[0].sum())
+    packed = packing.pack_masked_ffn(w1, b1, w2, b2, masks)
+    assert packed["w1p"].shape == (4, 11, keep)
+    assert packed["w2p"].shape == (4, keep, 7)
+    assert keep < 64  # FLOPs actually shrink
+
+
+def test_nonuniform_masks_rejected():
+    masks = np.zeros((2, 8), bool)
+    masks[0, :3] = True
+    masks[1, :5] = True
+    with pytest.raises(ValueError):
+        packing.kept_indices(masks)
+
+
+def test_schedules_identical_numerics():
+    w1, b1, w2, b2, masks = _setup(32, 4, 9, 6)
+    packed = packing.pack_masked_ffn(w1, b1, w2, b2, masks)
+    x = jax.random.normal(jax.random.PRNGKey(7), (50, 9))
+
+    def apply_fn(params, xb, i):
+        return packing.packed_ffn_apply(params, xb, sample=i)
+
+    y_batch = scheduler.run(scheduler.Schedule("batch"), apply_fn, packed,
+                            x, 4)
+    y_sampling = scheduler.run(scheduler.Schedule("sampling", chunk=16),
+                               apply_fn, packed, x, 4)
+    np.testing.assert_allclose(np.asarray(y_batch), np.asarray(y_sampling),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_weight_load_counts_match_paper():
+    # paper §V-D: sampling-level N x ceil(B/chunk) loads vs batch-level N
+    assert scheduler.weight_load_counts(
+        scheduler.Schedule("batch"), batch=64, n_samples=4) == 4
+    assert scheduler.weight_load_counts(
+        scheduler.Schedule("sampling", chunk=16), batch=64, n_samples=4) \
+        == 4 * 4
+
+
+def test_traffic_model_batch_level_wins():
+    t_batch = scheduler.traffic_model(scheduler.Schedule("batch"),
+                                      batch=256, n_samples=8,
+                                      d_in=104, k_hidden=52, d_out=104)
+    t_samp = scheduler.traffic_model(scheduler.Schedule("sampling", chunk=64),
+                                     batch=256, n_samples=8,
+                                     d_in=104, k_hidden=52, d_out=104)
+    assert t_batch.weight_bytes < t_samp.weight_bytes
+    assert t_batch.arithmetic_intensity > t_samp.arithmetic_intensity
+    assert t_batch.flops == t_samp.flops  # same math, different traffic
+
+
+def test_mask_ids_for_batch_contiguous_groups():
+    ids = masksembles.mask_ids_for_batch(8, 4)
+    np.testing.assert_array_equal(np.asarray(ids), [0, 0, 1, 1, 2, 2, 3, 3])

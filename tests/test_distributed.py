@@ -1,0 +1,354 @@
+"""Distribution layer tests. Multi-device behaviour runs in subprocesses
+(fresh XLA_FLAGS, since the main pytest process must keep 1 device)."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import checkpoint as CKPT
+from repro.distributed import compression as COMP
+from repro.distributed import elastic, straggler
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_subprocess(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_rotation():
+    tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.ones(4)}}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CKPT.CheckpointManager(d, keep=2)
+        for step in (1, 2, 3):
+            mgr.save(step, tree, {"step": step})
+        assert CKPT.latest_step(d) == 3
+        # rotation keeps last 2
+        steps = sorted(int(x.split("_")[1]) for x in os.listdir(d)
+                       if x.startswith("step_"))
+        assert steps == [2, 3]
+        got = mgr.restore_latest(jax.eval_shape(lambda: tree))
+        assert got is not None
+        step, restored, meta = got
+        assert step == 3 and meta["step"] == 3
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.asarray(tree["a"]))
+
+
+def test_checkpoint_crash_atomicity():
+    tree = {"x": jnp.ones(3)}
+    with tempfile.TemporaryDirectory() as d:
+        CKPT.save_checkpoint(d, 5, tree)
+        # simulate a crashed write: stale tmp dir must be ignored
+        os.makedirs(os.path.join(d, "step_00000009.tmp/arrays"))
+        assert CKPT.latest_step(d) == 5
+        restored, _ = CKPT.restore_checkpoint(
+            d, 5, jax.eval_shape(lambda: tree))
+        np.testing.assert_array_equal(np.asarray(restored["x"]), 1.0)
+
+
+def test_checkpoint_shape_mismatch_rejected():
+    with tempfile.TemporaryDirectory() as d:
+        CKPT.save_checkpoint(d, 1, {"x": jnp.ones(3)})
+        with pytest.raises(ValueError):
+            CKPT.restore_checkpoint(
+                d, 1, {"x": jax.ShapeDtypeStruct((4,), jnp.float32)})
+
+
+def test_checkpoint_restore_reshard_across_meshes():
+    """Save under a (4,2) mesh, restore under (2,4) — the elastic-remesh
+    restart path."""
+    code = """
+import jax, jax.numpy as jnp, numpy as np, tempfile
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.distributed import checkpoint as CKPT
+m1 = jax.make_mesh((4, 2), ("data", "model"))
+m2 = jax.make_mesh((2, 4), ("data", "model"))
+x = jnp.arange(64.0).reshape(8, 8)
+xs = jax.device_put(x, NamedSharding(m1, P("data", "model")))
+with tempfile.TemporaryDirectory() as d:
+    CKPT.save_checkpoint(d, 1, {"w": xs})
+    target = {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}
+    sh = {"w": NamedSharding(m2, P("data", "model"))}
+    restored, _ = CKPT.restore_checkpoint(d, 1, target, sh)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(x))
+    assert restored["w"].sharding.mesh.shape["data"] == 2
+print("RESHARD_OK")
+"""
+    assert "RESHARD_OK" in run_subprocess(code)
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def test_param_sharding_rules():
+    code = """
+import jax, jax.numpy as jnp
+from repro.distributed import sharding
+from repro.configs import registry
+from repro.models import build_model
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+cfg = registry.smoke_config("qwen2-1.5b", d_model=64, n_heads=4, n_kv_heads=4,
+                            head_dim=16, d_ff=128, vocab_size=256)
+model = build_model(cfg)
+specs = model.param_specs()
+sh = sharding.param_shardings(mesh, specs)
+flat = jax.tree_util.tree_flatten_with_path(sh)[0]
+def spec_of(substr):
+    for path, s in flat:
+        p = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        if substr in p:
+            return p, tuple(s.spec)
+    raise KeyError(substr)
+p, s = spec_of("attn/wq/w");    assert s == (None, "data", "model"), (p, s)
+p, s = spec_of("attn/wo/w");    assert s == (None, "model", "data"), (p, s)
+p, s = spec_of("ffn/wg/w");     assert s == (None, "data", "model"), (p, s)
+p, s = spec_of("ffn/wd/w");     assert s == (None, "model", "data"), (p, s)
+p, s = spec_of("embed/embed");  assert s == ("model", "data"), (p, s)
+p, s = spec_of("masks");        assert s == (None, None, None) or s == (), (p, s)
+print("RULES_OK")
+"""
+    assert "RULES_OK" in run_subprocess(code)
+
+
+def test_moe_expert_sharding_and_factored_states():
+    code = """
+import jax, jax.numpy as jnp
+from repro.distributed import sharding
+from repro.configs import registry
+from repro.models import build_model
+from repro.optim import OptimizerConfig, build_optimizer
+from repro.train import train_state_specs
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+cfg = registry.smoke_config("arctic-480b")
+model = build_model(cfg)
+opt = build_optimizer(OptimizerConfig(name="adafactor"))
+specs = train_state_specs(model, opt)
+sh = sharding.param_shardings(mesh, specs)
+flat = jax.tree_util.tree_flatten_with_path(sh)[0]
+found = {}
+for path, s in flat:
+    p = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+    if p.endswith("moe/weg") and p.startswith("params"):
+        found["weg"] = tuple(s.spec)
+    if "moe/weg/vr" in p:
+        found["weg_vr"] = tuple(s.spec)
+    if "moe/weg/vc" in p:
+        found["weg_vc"] = tuple(s.spec)
+assert found["weg"] == (None, "model", "data", None), found
+assert found["weg_vr"] == (None, "model", "data"), found
+assert found["weg_vc"] == (None, "model", None), found
+print("MOE_OK")
+"""
+    assert "MOE_OK" in run_subprocess(code)
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+def test_int8_quantization_bounds():
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 64)) * 5
+    q, s = COMP.quantize_int8(x)
+    err = np.abs(np.asarray(COMP.dequantize_int8(q, s) - x))
+    amax = np.abs(np.asarray(x)).max(-1, keepdims=True)
+    assert (err <= amax / 127.0 * 0.5 + 1e-6).all()
+
+
+def test_error_feedback_accumulates():
+    """EF residual carries quantization error -> the *sum* of applied
+    updates converges to the true sum (unbiased over steps)."""
+    g = jax.random.normal(jax.random.PRNGKey(1), (8, 32)) * 0.01
+    grads = {"w": g}
+    res = COMP.ef_init(grads)
+    applied = jnp.zeros_like(g)
+    for _ in range(30):
+        deq, res = COMP.ef_update(grads, res)
+        applied = applied + deq["w"]
+    want = np.asarray(g) * 30
+    got = np.asarray(applied)
+    # without EF the bias would persist; with EF relative error shrinks
+    rel = np.abs(got - want).max() / (np.abs(want).max() + 1e-12)
+    assert rel < 0.02, rel
+
+
+def test_compress_tree_passthrough_small():
+    tree = {"scalar": jnp.ones(()), "vec": jnp.ones(5),
+            "mat": jnp.ones((4, 4))}
+    comp = COMP.compress_tree(tree)
+    assert "raw" in comp["scalar"] and "raw" in comp["vec"]
+    assert "q" in comp["mat"]
+    dec = COMP.decompress_tree(comp)
+    np.testing.assert_allclose(np.asarray(dec["mat"]), 1.0, rtol=0.02)
+
+
+# ---------------------------------------------------------------------------
+# elastic + straggler
+# ---------------------------------------------------------------------------
+
+def test_remesh_prefers_model_axis():
+    plan = elastic.plan_remesh({"pod": 2, "data": 16, "model": 16},
+                               n_alive=384)
+    assert plan.new_shape["model"] == 16          # TP groups preserved
+    assert not plan.reshard_required
+    assert plan.new_size <= 384
+
+
+def test_remesh_degrades_gracefully():
+    plan = elastic.plan_remesh({"data": 16, "model": 16}, n_alive=24)
+    assert plan.new_size <= 24
+    assert plan.new_size >= 16
+
+
+def test_grad_accum_preserves_global_batch():
+    accum = elastic.grad_accum_for_batch(global_batch=256, old_dp=32,
+                                         new_dp=24, old_accum=1)
+    assert accum * 24 >= 32
+
+
+def test_straggler_detection_and_escalation():
+    mon = straggler.StragglerMonitor(window=20, patience=2)
+    for i in range(10):
+        assert mon.report(i, 1.0).severity == "ok"
+    assert mon.report(10, 1.7).severity == "slow"
+    assert mon.report(11, 4.0).severity == "straggler"
+    assert not mon.should_escalate
+    assert mon.report(12, 4.2).severity == "straggler"
+    assert mon.should_escalate
+
+
+def test_elastic_restart_end_to_end():
+    """The full failure-recovery path: train sharded on an 8-chip (4,2)
+    mesh, checkpoint, 'lose' 4 chips, plan_remesh -> (2,2), restore with
+    resharding, keep the global batch via grad accumulation, train on."""
+    code = """
+import jax, jax.numpy as jnp, numpy as np, tempfile
+from repro.configs import registry
+from repro.models import build_model
+from repro.optim import OptimizerConfig, build_optimizer
+from repro.train import TrainConfig, make_train_step, train_state_init
+from repro.distributed import checkpoint as CKPT, elastic, sharding
+from repro.data import LMDataConfig, lm_batch
+
+cfg = registry.smoke_config("qwen2-1.5b", n_layers=2)
+model = build_model(cfg)
+opt = build_optimizer(OptimizerConfig(lr=1e-3))
+data = LMDataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=8)
+state = train_state_init(model, opt, jax.random.PRNGKey(0))
+
+mesh_a = jax.make_mesh((4, 2), ("data", "model"))
+jax.sharding.set_mesh(mesh_a)
+sh_a = sharding.param_shardings(mesh_a, jax.eval_shape(lambda: state))
+step = make_train_step(model, opt, TrainConfig())
+stepj = jax.jit(step, in_shardings=(sh_a, None))
+state = jax.device_put(state, sh_a)
+for i in range(3):
+    state, m = stepj(state, lm_batch(data, i))
+
+with tempfile.TemporaryDirectory() as d:
+    CKPT.save_checkpoint(d, 3, state)
+    # 4 of 8 chips die
+    plan = elastic.plan_remesh({"data": 4, "model": 2}, n_alive=4)
+    assert plan.new_shape["model"] == 2, plan       # TP preserved
+    accum = elastic.grad_accum_for_batch(8, old_dp=4,
+                                         new_dp=plan.new_shape["data"])
+    mesh_b = jax.make_mesh((plan.new_shape["data"],
+                            plan.new_shape["model"]), ("data", "model"))
+    jax.sharding.set_mesh(mesh_b)
+    sh_b = sharding.param_shardings(mesh_b, jax.eval_shape(lambda: state))
+    restored, _ = CKPT.restore_checkpoint(d, 3, jax.eval_shape(lambda: state),
+                                          sh_b)
+    step_b = jax.jit(make_train_step(model, opt,
+                                     TrainConfig(grad_accum=accum)),
+                     in_shardings=(sh_b, None))
+    restored, m2 = step_b(restored, lm_batch(data, 3))   # same batch 3!
+    assert np.isfinite(float(m2["loss"]))
+print("ELASTIC_OK", plan.new_shape, "accum", accum)
+"""
+    out = run_subprocess(code, devices=8)
+    assert "ELASTIC_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# pipeline parallelism
+# ---------------------------------------------------------------------------
+
+def test_pipeline_forward_matches_sequential():
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.distributed import pipeline
+mesh = jax.make_mesh((4,), ("stage",))
+n_stages, d = 4, 8
+ws = jax.random.normal(jax.random.PRNGKey(0), (n_stages, d, d)) * 0.3
+x = jax.random.normal(jax.random.PRNGKey(1), (8, d))
+def stage_fn(w, h):
+    return jnp.tanh(h @ w)
+want = x
+for i in range(n_stages):
+    want = stage_fn(ws[i], want)
+got = pipeline.pipeline_forward(mesh, stage_fn, ws, x, n_micro=4)
+np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                           atol=1e-5)
+print("PIPE_OK", pipeline.bubble_fraction(4, 4))
+"""
+    out = run_subprocess(code, devices=4)
+    assert "PIPE_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# end-to-end sharded train step on a CPU mesh
+# ---------------------------------------------------------------------------
+
+def test_sharded_train_step_runs_and_matches_single_device():
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import registry
+from repro.models import build_model
+from repro.optim import OptimizerConfig, build_optimizer
+from repro.train import TrainConfig, make_train_step, train_state_init, train_state_specs
+from repro.distributed import sharding
+from repro.data import LMDataConfig, lm_batch
+
+cfg = registry.smoke_config("qwen2-1.5b")
+model = build_model(cfg)
+opt = build_optimizer(OptimizerConfig(lr=1e-3))
+step = make_train_step(model, opt, TrainConfig())
+state = train_state_init(model, opt, jax.random.PRNGKey(0))
+data = LMDataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=8)
+batch = lm_batch(data, 0)
+# single device reference
+s1, m1 = jax.jit(step)(state, batch)
+# sharded across a (4, 2) mesh
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+jax.sharding.set_mesh(mesh)
+st_sh = sharding.param_shardings(mesh, jax.eval_shape(lambda: state))
+b_sh = sharding.batch_shardings(mesh, jax.eval_shape(lambda: batch))
+stepj = jax.jit(step, in_shardings=(st_sh, b_sh), out_shardings=(st_sh, None))
+state_p = jax.device_put(state, st_sh)
+batch_p = jax.device_put(batch, b_sh)
+s2, m2 = stepj(state_p, batch_p)
+np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-4)
+d = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                 s1["params"], jax.device_get(s2["params"]))
+assert max(jax.tree.leaves(d)) < 5e-3, max(jax.tree.leaves(d))
+print("SHARDED_STEP_OK")
+"""
+    assert "SHARDED_STEP_OK" in run_subprocess(code)

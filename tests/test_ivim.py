@@ -1,0 +1,98 @@
+"""IVIM application tests — the paper's own model, data and evaluation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import uncertainty as unc_lib
+from repro.ivim import data as D, evaluate as E, model as M, physics as P
+from repro.ivim import train as T
+
+
+def test_physics_signal_limits():
+    b = jnp.asarray(P.CLINICAL_B_VALUES)
+    s = P.ivim_signal(b, d=jnp.asarray(0.001), dstar=jnp.asarray(0.05),
+                      f=jnp.asarray(0.2), s0=jnp.asarray(1.0))
+    # S(0) = S0; signal decays monotonically with b
+    assert s[0] == pytest.approx(1.0)
+    assert (jnp.diff(s) <= 0).all()
+
+
+def test_physics_components():
+    # f=0 -> pure diffusion; f=1 -> pure perfusion
+    b = jnp.asarray([0.0, 100.0])
+    s_diff = P.ivim_signal(b, jnp.asarray(0.002), jnp.asarray(0.05),
+                           jnp.asarray(0.0), jnp.asarray(1.0))
+    np.testing.assert_allclose(float(s_diff[1]), np.exp(-100 * 0.002),
+                               rtol=1e-6)
+
+
+def test_dataset_noise_scales_with_snr():
+    noisy = {}
+    for snr in (5.0, 50.0):
+        ds = D.make_dataset(D.SyntheticConfig(n_voxels=500, snr=snr, seed=1))
+        noisy[snr] = float(jnp.mean((ds["signals"] - ds["clean"]) ** 2))
+    assert noisy[5.0] > 10 * noisy[50.0]
+
+
+def test_dataset_deterministic():
+    a = D.make_dataset(D.SyntheticConfig(n_voxels=10, snr=20.0, seed=7))
+    b = D.make_dataset(D.SyntheticConfig(n_voxels=10, snr=20.0, seed=7))
+    np.testing.assert_array_equal(np.asarray(a["signals"]),
+                                  np.asarray(b["signals"]))
+
+
+def test_batcher_stateless_restart():
+    ds = D.make_dataset(D.SyntheticConfig(n_voxels=256, seed=0))
+    b1 = D.Batcher(ds, 32, seed=3)
+    b2 = D.Batcher(ds, 32, seed=3)
+    for step in (0, 5, 11):  # arbitrary steps, no sequential replay needed
+        np.testing.assert_array_equal(np.asarray(b1.batch(step)),
+                                      np.asarray(b2.batch(step)))
+
+
+def test_conversion_ranges():
+    cfg = M.IvimConfig()
+    params, state = M.init(cfg, jax.random.PRNGKey(0))
+    x = jnp.ones((16, cfg.width))
+    y, _ = M.apply(cfg, params, state, x)
+    for i, (lo, hi) in enumerate(cfg.out_ranges):
+        assert (y[:, i] >= lo).all() and (y[:, i] <= hi).all()
+
+
+def test_packed_serving_exact():
+    """Mask-zero skipping + BN folding + batch-level schedule == the
+    training-form model, bit-for-bit up to float assoc (paper §V)."""
+    cfg = M.IvimConfig(n_masks=4, scale=2.0)
+    params, state = M.init(cfg, jax.random.PRNGKey(1))
+    x = D.make_dataset(D.SyntheticConfig(n_voxels=64, seed=2))["signals"]
+    want = M.apply_all_samples(cfg, params, state, x)
+    packed = M.pack_for_serving(cfg, params, state)
+    got = M.packed_apply(cfg, packed, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_training_reduces_loss():
+    cfg = M.IvimConfig(n_masks=4, scale=2.0)
+    _, _, hist = T.train(cfg, T.TrainConfig(steps=60, batch_size=64))
+    assert np.mean(hist[-10:]) < np.mean(hist[:10]) * 0.8
+
+
+def test_plain_dnn_mode():
+    """n_masks=0 -> the original IVIM-NET (the DNN the paper converts)."""
+    cfg = M.IvimConfig(n_masks=0)
+    params, state = M.init(cfg, jax.random.PRNGKey(0))
+    assert "mask1" not in params
+    samples = M.apply_all_samples(cfg, params, state,
+                                  jnp.ones((4, cfg.width)))
+    assert samples.shape == (1, 4, 4)  # single deterministic sample
+
+
+def test_requirement_checker():
+    req = unc_lib.UncertaintyRequirements(tolerance=0.0)
+    good = {5.0: 0.5, 15.0: 0.3, 50.0: 0.1}
+    bad = {5.0: 0.1, 15.0: 0.3, 50.0: 0.5}
+    assert unc_lib.check_requirements(req, good, good).satisfied
+    assert not unc_lib.check_requirements(req, bad, good).satisfied

@@ -1,0 +1,150 @@
+"""Deep correctness tests for the sequence-mixing primitives: the chunkwise
+mLSTM must equal the step-by-step recurrence, RG-LRU's associative scan must
+equal sequential evaluation, and chunk size must not change results."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import rglru, xlstm
+
+
+def _mlstm_inputs(b=2, h=2, s=24, dh=8, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (b, h, s, dh))
+    k = jax.random.normal(ks[1], (b, h, s, dh)) / np.sqrt(dh)
+    v = jax.random.normal(ks[2], (b, h, s, dh))
+    ig = jax.random.normal(ks[3], (b, h, s)) * 2.0
+    fg = jax.random.normal(ks[4], (b, h, s)) + 2.0
+    return q, k, v, ig, fg
+
+
+def _init_carry(b, h, dh):
+    return (jnp.zeros((b, h, dh, dh)), jnp.zeros((b, h, dh)),
+            jnp.full((b, h), -1e30))
+
+
+@pytest.mark.parametrize("chunk", [1, 4, 8, 24])
+def test_mlstm_chunkwise_equals_recurrence(chunk):
+    """The chunkwise-parallel mLSTM (log-space stabilized) must reproduce
+    the literal per-step recurrence exactly — the TPU adaptation is an
+    algebraic reformulation, not an approximation."""
+    b, h, s, dh = 2, 2, 24, 8
+    q, k, v, ig, fg = _mlstm_inputs(b, h, s, dh)
+    out_c, (C_c, n_c, m_c) = xlstm.mlstm_parallel(
+        q, k, v, ig, fg, _init_carry(b, h, dh), chunk)
+
+    carry = _init_carry(b, h, dh)
+    outs = []
+    for t in range(s):
+        o, carry = xlstm.mlstm_step(q[:, :, t], k[:, :, t], v[:, :, t],
+                                    ig[:, :, t], fg[:, :, t], carry)
+        outs.append(o)
+    out_s = jnp.stack(outs, axis=2)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_s),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(m_c), np.asarray(carry[2]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(C_c), np.asarray(carry[0]),
+                               rtol=2e-4, atol=2e-5)
+
+
+@given(chunk=st.sampled_from([2, 3, 6, 12]), seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_mlstm_chunk_size_invariance(chunk, seed):
+    b, h, s, dh = 1, 2, 12, 4
+    q, k, v, ig, fg = _mlstm_inputs(b, h, s, dh, seed=seed)
+    ref, _ = xlstm.mlstm_parallel(q, k, v, ig, fg, _init_carry(b, h, dh), s)
+    got, _ = xlstm.mlstm_parallel(q, k, v, ig, fg, _init_carry(b, h, dh),
+                                  chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_mlstm_unroll_matches_scan():
+    b, h, s, dh = 1, 2, 16, 4
+    q, k, v, ig, fg = _mlstm_inputs(b, h, s, dh, seed=3)
+    a, _ = xlstm.mlstm_parallel(q, k, v, ig, fg, _init_carry(b, h, dh), 4,
+                                unroll=False)
+    c, _ = xlstm.mlstm_parallel(q, k, v, ig, fg, _init_carry(b, h, dh), 4,
+                                unroll=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-6,
+                               atol=1e-7)
+
+
+def test_mlstm_stability_extreme_gates():
+    """Exponential input gates up to e^30 must not overflow (log-space
+    stabilizer): finite outputs and states."""
+    b, h, s, dh = 1, 1, 16, 4
+    q, k, v, _, _ = _mlstm_inputs(b, h, s, dh, seed=7)
+    ig = jnp.full((b, h, s), 30.0)     # e^30 unstabilized -> overflow
+    fg = jnp.full((b, h, s), -10.0)    # near-zero forget
+    out, (C, n, m) = xlstm.mlstm_parallel(q, k, v, ig, fg,
+                                          _init_carry(b, h, dh), 4)
+    assert bool(jnp.isfinite(out).all())
+    assert bool(jnp.isfinite(C).all()) and bool(jnp.isfinite(m).all())
+
+
+def test_rglru_scan_equals_sequential():
+    width, b, s = 16, 2, 20
+    p = rglru.rglru_init(jax.random.PRNGKey(0), width, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, width))
+    y_scan, h_last = rglru.rglru_scan(p, x)
+    h = jnp.zeros((b, width))
+    ys = []
+    for t in range(s):
+        y_t, h = rglru.rglru_step(p, x[:, t], h)
+        ys.append(y_t)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_seq),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(h),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_rglru_decay_bounds():
+    """RG-LRU recurrence weight a_t = a^(c·r) must stay in (0, 1) — the
+    recurrence is contractive (no state explosion at 500k steps)."""
+    width = 8
+    p = rglru.rglru_init(jax.random.PRNGKey(0), width, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, width)) * 10
+    y, h = rglru.rglru_scan(p, x)
+    assert bool(jnp.isfinite(y).all())
+    # long-run stability: feed the same block 50x through the step form
+    state = jnp.zeros((4, width))
+    for _ in range(50):
+        _, state = rglru.rglru_step(p, x[:, 0], state)
+    assert bool(jnp.isfinite(state).all())
+    assert float(jnp.abs(state).max()) < 1e3
+
+
+def test_banded_attention_unroll_matches_scan():
+    from repro.models import layers
+    b, h, s, dh, w = 1, 2, 64, 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, h, s, dh))
+    k = jax.random.normal(ks[1], (b, h, s, dh))
+    v = jax.random.normal(ks[2], (b, h, s, dh))
+    a = layers.attention_banded(q, k, v, window=w, unroll=False)
+    c = layers.attention_banded(q, k, v, window=w, unroll=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-6,
+                               atol=1e-7)
+
+
+def test_chunked_attention_unroll_matches_scan():
+    from repro.models import layers
+    b, h, s, dh = 1, 2, 64, 8
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, h, s, dh))
+    k = jax.random.normal(ks[1], (b, h, s, dh))
+    v = jax.random.normal(ks[2], (b, h, s, dh))
+    a = layers.attention_chunked(q, k, v, causal=True, chunk=16)
+    c = layers.attention_chunked(q, k, v, causal=True, chunk=16,
+                                 unroll=True)
+    full = layers.attention_full(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-6,
+                               atol=1e-7)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(full), rtol=1e-5,
+                               atol=1e-6)
