@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: catches JAX API drift and compat-layer violations at PR
+# time. Usage: ./ci.sh [--no-install]
+set -euo pipefail
+cd "$(dirname "$0")"
+
+if [[ "${1:-}" != "--no-install" ]]; then
+    python -m pip install -q -r requirements-dev.txt
+fi
+
+# Drifted JAX APIs may be spelled directly only in the portability layer —
+# everything else must go through repro.compat (see src/repro/compat.py).
+violations=$(grep -rnE \
+    'jax\.shard_map|jax\.set_mesh|jax\.sharding\.set_mesh|jax\.sharding\.use_mesh|jax\.sharding\.AxisType|jax\.experimental\.shard_map|from jax\.experimental import .*shard_map|from jax\.sharding import .*(set_mesh|use_mesh|AxisType)|jax\.tree_map\(|jax\.tree_leaves\(' \
+    src/repro --include='*.py' | grep -v 'src/repro/compat.py' || true)
+if [[ -n "$violations" ]]; then
+    echo "ERROR: drifted JAX APIs used outside repro/compat.py:" >&2
+    echo "$violations" >&2
+    exit 1
+fi
+
+# Tier-1 verify (ROADMAP.md): the whole suite, quiet, fail-fast off so the
+# summary shows every regression.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q

@@ -1,0 +1,300 @@
+"""Version-portability layer: the single choke-point for drifted JAX APIs.
+
+The repo targets "any JAX >= 0.4.35 (first ``jax.make_mesh``), TPU or CPU".
+Every API that has moved, been renamed, or grown/lost keyword arguments
+between that floor and current JAX is wrapped here, and **no other module
+under src/repro/ may touch the drifted spellings directly** (ci.sh greps
+for violations):
+
+  =====================  ==========================  =======================
+  symbol                 new-JAX home                old-JAX fallback
+  =====================  ==========================  =======================
+  ``shard_map``          ``jax.shard_map``           ``jax.experimental.
+                         (``check_vma=``)            shard_map`` (``check_rep=``)
+  ``set_mesh``           ``jax.sharding.set_mesh``   process-wide ``with mesh:``
+                                                     resource env (ExitStack)
+  ``use_mesh``           ``jax.sharding.use_mesh``   ``with mesh:``
+  ``make_mesh``          ``jax.make_mesh(...,        ``jax.make_mesh`` without
+                         axis_types=...)``           it / ``mesh_utils``
+  ``AxisType``           ``jax.sharding.AxisType``   ``None`` (meshes are
+                                                     implicitly Auto)
+  tree utilities         ``jax.tree.*`` /            ``jax.tree_util.*``
+                         ``jax.tree_util.*``
+  =====================  ==========================  =======================
+
+Kernel backend selection lives here too: the four ``kernels/*/ops.py``
+dispatchers call :func:`kernel_backend` once per process (lazily, on the
+first kernel call — never at import) and get one of
+``"pallas-tpu"`` (compiled Pallas on a real TPU), ``"pallas-interpret"``
+(Pallas interpreter on CPU/GPU — bit-accurate, slow), or ``"xla"`` (the
+pure-jnp reference path, used when Pallas itself cannot be imported).
+``REPRO_KERNEL_BACKEND`` overrides the probe for A/B testing.
+
+Importing this module must NOT initialize jax backends (the dry-run pins
+``XLA_FLAGS`` before first device init), so every platform probe is behind a
+cached function, never module-level.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+import inspect
+import os
+from typing import Any, Callable
+
+import jax
+
+__all__ = [
+    "JAX_VERSION", "AxisType", "make_mesh", "set_mesh", "use_mesh",
+    "get_mesh", "shard_map", "tree_map", "tree_leaves", "tree_flatten",
+    "tree_unflatten", "tree_structure", "tree_map_with_path",
+    "tree_flatten_with_path", "default_backend", "on_tpu",
+    "kernel_backend", "pallas_interpret_default", "import_pallas_kernel",
+    "kernel_backend_for", "version_summary", "KERNEL_BACKENDS",
+]
+
+JAX_VERSION: tuple[int, ...] = tuple(
+    int(p) for p in jax.__version__.split(".")[:3] if p.isdigit())
+
+
+# ---------------------------------------------------------------------------
+# tree utilities (jax.tree.* is the modern spelling; jax.tree_util the stable
+# fallback — jax.tree_map/jax.tree_leaves TOP-LEVEL aliases were removed, so
+# nothing here goes through them)
+# ---------------------------------------------------------------------------
+
+_tree_ns = getattr(jax, "tree", None)
+
+tree_map: Callable = (_tree_ns.map if _tree_ns is not None
+                      and hasattr(_tree_ns, "map") else jax.tree_util.tree_map)
+tree_leaves: Callable = (_tree_ns.leaves if _tree_ns is not None
+                         and hasattr(_tree_ns, "leaves")
+                         else jax.tree_util.tree_leaves)
+tree_flatten: Callable = jax.tree_util.tree_flatten
+tree_unflatten: Callable = jax.tree_util.tree_unflatten
+tree_structure: Callable = jax.tree_util.tree_structure
+tree_map_with_path: Callable = jax.tree_util.tree_map_with_path
+tree_flatten_with_path: Callable = jax.tree_util.tree_flatten_with_path
+
+
+# ---------------------------------------------------------------------------
+# mesh construction
+# ---------------------------------------------------------------------------
+
+#: ``jax.sharding.AxisType`` where it exists, else None (pre-explicit-sharding
+#: JAX: every mesh axis behaves as Auto and there is nothing to spell).
+AxisType = getattr(jax.sharding, "AxisType", None)
+
+_make_mesh_native = getattr(jax, "make_mesh", None)
+_MAKE_MESH_PARAMS: frozenset[str] = (
+    frozenset(inspect.signature(_make_mesh_native).parameters)
+    if _make_mesh_native is not None else frozenset())
+
+
+def make_mesh(axis_shapes: tuple[int, ...], axis_names: tuple[str, ...], *,
+              axis_types: Any = "auto", devices=None) -> jax.sharding.Mesh:
+    """Portable ``jax.make_mesh``.
+
+    ``axis_types="auto"`` requests all-Auto axes on JAX versions that have
+    explicit axis types and silently omits them where the concept (and the
+    kwarg) does not exist. Pass an explicit tuple of ``compat.AxisType``
+    members to request something else (ignored on old JAX).
+    """
+    if _make_mesh_native is not None:
+        kwargs: dict[str, Any] = {}
+        if devices is not None:
+            kwargs["devices"] = devices
+        if AxisType is not None and "axis_types" in _MAKE_MESH_PARAMS:
+            types = ((AxisType.Auto,) * len(axis_names)
+                     if axis_types == "auto" else axis_types)
+            if types is not None:
+                kwargs["axis_types"] = types
+        return _make_mesh_native(axis_shapes, axis_names, **kwargs)
+    # pre-0.4.35: assemble the device grid by hand
+    from jax.experimental import mesh_utils
+    devs = mesh_utils.create_device_mesh(axis_shapes, devices=devices)
+    return jax.sharding.Mesh(devs, axis_names)
+
+
+# ---------------------------------------------------------------------------
+# default-mesh installation (set_mesh / use_mesh)
+# ---------------------------------------------------------------------------
+
+_set_mesh_native = (getattr(jax.sharding, "set_mesh", None)
+                    or getattr(jax, "set_mesh", None))
+_use_mesh_native = getattr(jax.sharding, "use_mesh", None)
+
+# Emulation state: on JAX without set_mesh, "the process default mesh" is the
+# innermost entered mesh context; we keep exactly one entered here.
+_emulated_env = contextlib.ExitStack()
+_current_mesh: jax.sharding.Mesh | None = None
+
+
+def set_mesh(mesh: jax.sharding.Mesh | None):
+    """Install ``mesh`` as the process-wide default; returns the previous one.
+
+    On JAX with ``jax.sharding.set_mesh`` this is a passthrough. Elsewhere it
+    emulates the semantics by (re-)entering the mesh's resource-env context
+    manager for the life of the process — explicit ``NamedSharding``s keep
+    working either way, and named-axis lookups resolve against ``mesh``.
+    ``set_mesh(None)`` clears the emulated default (best-effort natively).
+
+    Caveat: the emulated default lives in jax's thread-local trace state, so
+    it is only visible to the installing thread. Threaded callers on JAX
+    without native ``set_mesh`` must call this per worker thread (or pass
+    explicit ``NamedSharding``s, which work from any thread).
+    """
+    global _current_mesh
+    prev = _current_mesh
+    if _set_mesh_native is not None:
+        try:
+            _set_mesh_native(mesh)
+        except (TypeError, ValueError):
+            if mesh is not None:   # only clearing may be unsupported
+                raise
+            # this JAX's set_mesh cannot clear the default: the previous
+            # mesh stays installed process-wide, so keep reporting it
+            # rather than letting get_mesh() diverge from reality
+            return prev
+    else:
+        _emulated_env.close()
+        if mesh is not None:
+            _emulated_env.enter_context(mesh)
+    _current_mesh = mesh
+    return prev
+
+
+def get_mesh() -> jax.sharding.Mesh | None:
+    """The mesh most recently installed through :func:`set_mesh`."""
+    return _current_mesh
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: jax.sharding.Mesh):
+    """Scoped default mesh: native ``jax.sharding.use_mesh`` where available,
+    the classic ``with mesh:`` resource env elsewhere."""
+    cm = _use_mesh_native(mesh) if _use_mesh_native is not None else mesh
+    with cm:
+        yield mesh
+
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+_shard_map_native = getattr(jax, "shard_map", None)
+if _shard_map_native is None:
+    from jax.experimental.shard_map import shard_map as _shard_map_native
+_SHARD_MAP_PARAMS: frozenset[str] = frozenset(
+    inspect.signature(_shard_map_native).parameters)
+
+
+def shard_map(f: Callable, *, mesh, in_specs, out_specs,
+              check_vma: bool | None = None, **kwargs) -> Callable:
+    """Portable ``shard_map``.
+
+    ``check_vma`` is the modern name for replication/varying-manual-axes
+    checking; it is forwarded as ``check_rep`` on JAX where shard_map still
+    lives in ``jax.experimental``. Unknown extra kwargs are forwarded only if
+    the installed signature accepts them (e.g. ``auto=...``).
+    """
+    kw: dict[str, Any] = dict(mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs)
+    if check_vma is not None:
+        if "check_vma" in _SHARD_MAP_PARAMS:
+            kw["check_vma"] = check_vma
+        elif "check_rep" in _SHARD_MAP_PARAMS:
+            kw["check_rep"] = check_vma
+    for k, v in kwargs.items():
+        if k in _SHARD_MAP_PARAMS:
+            kw[k] = v
+    return _shard_map_native(f, **kw)
+
+
+# ---------------------------------------------------------------------------
+# platform probing + kernel backend selection
+# ---------------------------------------------------------------------------
+
+KERNEL_BACKENDS = ("pallas-tpu", "pallas-interpret", "xla")
+
+
+@functools.cache
+def default_backend() -> str:
+    """Cached ``jax.default_backend()`` (first call initializes devices)."""
+    return jax.default_backend()
+
+
+def on_tpu() -> bool:
+    return default_backend() == "tpu"
+
+
+@functools.cache
+def kernel_backend() -> str:
+    """Pick the kernel execution backend once per process.
+
+    Order: compiled Pallas on real TPUs; the Pallas interpreter everywhere
+    else Pallas imports (bit-accurate emulation of the same kernels); the
+    pure-XLA reference implementations when Pallas is absent entirely.
+    ``REPRO_KERNEL_BACKEND`` (one of ``KERNEL_BACKENDS``) overrides the probe.
+    """
+    forced = os.environ.get("REPRO_KERNEL_BACKEND", "").strip()
+    if forced:
+        if forced not in KERNEL_BACKENDS:
+            raise ValueError(
+                f"REPRO_KERNEL_BACKEND={forced!r} not in {KERNEL_BACKENDS}")
+        return forced
+    if on_tpu():
+        return "pallas-tpu"
+    try:
+        # the kernels need pltpu (memory spaces etc.) even in interpret mode,
+        # so a pallas-without-pltpu install must fall back to the reference
+        import jax.experimental.pallas      # noqa: F401
+        import jax.experimental.pallas.tpu  # noqa: F401
+        return "pallas-interpret"
+    except Exception:  # noqa: BLE001 — any import failure means no Pallas
+        return "xla"
+
+
+def pallas_interpret_default() -> bool:
+    """Resolution of ``interpret=None`` in the kernel wrappers."""
+    return kernel_backend() == "pallas-interpret"
+
+
+def import_pallas_kernel(module_name: str):
+    """Import a ``kernels/*/kernel.py`` module for an ops dispatcher.
+
+    Returns ``None`` only when Pallas itself is unavailable (the xla tier).
+    An ImportError raised from a broken kernel module while Pallas imports
+    fine is a real bug and is re-raised — silently degrading a TPU
+    deployment to the reference path would be far worse than crashing.
+    """
+    import importlib
+    try:
+        return importlib.import_module(module_name)
+    except ImportError:
+        try:
+            import jax.experimental.pallas      # noqa: F401
+            import jax.experimental.pallas.tpu  # noqa: F401
+        except Exception:  # noqa: BLE001
+            return None
+        raise
+
+
+def kernel_backend_for(kernel_module) -> str:
+    """Backend for a dispatcher whose kernel module came from
+    :func:`import_pallas_kernel`: ``"xla"`` iff the module is absent, the
+    process-wide :func:`kernel_backend` probe otherwise. Lazy — safe to call
+    only at trace/first-call time, never at import."""
+    return "xla" if kernel_module is None else kernel_backend()
+
+
+def version_summary() -> dict:
+    """Stamp for dry-run/sweep artifacts: what actually ran this process."""
+    return {"jax": jax.__version__,
+            "backend": default_backend(),
+            "kernel_backend": kernel_backend(),
+            "has_axis_type": AxisType is not None,
+            "has_native_set_mesh": _set_mesh_native is not None,
+            "shard_map_home": ("jax" if hasattr(jax, "shard_map")
+                               else "jax.experimental")}

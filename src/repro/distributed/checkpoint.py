@@ -33,6 +33,8 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro import compat
+
 Params = Any
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
@@ -42,7 +44,7 @@ _MANIFEST = "manifest.json"
 
 
 def _leaf_files(tree) -> list[tuple[str, Any]]:
-    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    flat = compat.tree_flatten_with_path(tree)[0]
     out = []
     for path, leaf in flat:
         name = "_".join(re.sub(r"\W", "", str(getattr(k, "key",
@@ -66,7 +68,7 @@ def save_checkpoint(directory: str, step: int, tree: Params,
         "step": step,
         "meta": meta or {},
         "leaves": [],
-        "treedef": jax.tree_util.tree_structure(tree).serialize_using_proto().hex(),
+        "treedef": compat.tree_structure(tree).serialize_using_proto().hex(),
     }
     for i, (name, leaf) in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
@@ -99,11 +101,11 @@ def restore_checkpoint(directory: str, step: int, target: Params,
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, _MANIFEST)) as f:
         manifest = json.load(f)
-    flat_t, treedef = jax.tree_util.tree_flatten(target)
+    flat_t, treedef = compat.tree_flatten(target)
     if len(flat_t) != len(manifest["leaves"]):
         raise ValueError(f"checkpoint has {len(manifest['leaves'])} leaves, "
                          f"target has {len(flat_t)}")
-    shard_flat = (jax.tree_util.tree_flatten(shardings)[0]
+    shard_flat = (compat.tree_flatten(shardings)[0]
                   if shardings is not None else [None] * len(flat_t))
     leaves = []
     for spec, info, shard in zip(flat_t, manifest["leaves"], shard_flat):
@@ -114,7 +116,7 @@ def restore_checkpoint(directory: str, step: int, target: Params,
         arr = arr.astype(spec.dtype)
         leaves.append(jax.device_put(arr, shard) if shard is not None
                       else jax.numpy.asarray(arr))
-    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["meta"]
+    return compat.tree_unflatten(treedef, leaves), manifest["meta"]
 
 
 @dataclasses.dataclass

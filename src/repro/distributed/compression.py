@@ -23,6 +23,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 Params = Any
 
 __all__ = ["quantize_int8", "dequantize_int8", "compress_tree",
@@ -52,7 +54,7 @@ def compress_tree(grads: Params) -> Params:
         q, s = quantize_int8(g)
         return {"q": q, "scale": s}
 
-    return jax.tree.map(comp, grads)
+    return compat.tree_map(comp, grads)
 
 
 def decompress_tree(comp: Params) -> Params:
@@ -61,13 +63,13 @@ def decompress_tree(comp: Params) -> Params:
             return leaf["raw"]
         return dequantize_int8(leaf["q"], leaf["scale"])
 
-    return jax.tree.map(dec, comp,
+    return compat.tree_map(dec, comp,
                         is_leaf=lambda x: isinstance(x, dict)
                         and ("raw" in x or "q" in x))
 
 
 def ef_init(grads_like: Params) -> Params:
-    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+    return compat.tree_map(lambda g: jnp.zeros(g.shape, jnp.float32),
                         grads_like)
 
 
@@ -76,11 +78,11 @@ def ef_update(grads: Params, residual: Params) -> tuple[Params, Params]:
     corrected - Q(corrected). Returns (quantize-then-dequantize'd grads,
     new residual). The lowered graph contains the int8 cast exactly where
     the cross-pod reduce happens."""
-    corrected = jax.tree.map(
+    corrected = compat.tree_map(
         lambda g, r: g.astype(jnp.float32) + r, grads, residual)
     comp = compress_tree(corrected)
     deq = decompress_tree(comp)
-    new_res = jax.tree.map(lambda c, d: c - d, corrected, deq)
+    new_res = compat.tree_map(lambda c, d: c - d, corrected, deq)
     return deq, new_res
 
 

@@ -18,7 +18,10 @@ from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["RemeshPlan", "plan_remesh", "grad_accum_for_batch"]
+from repro import compat
+
+__all__ = ["RemeshPlan", "plan_remesh", "mesh_from_plan",
+           "grad_accum_for_batch"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +70,15 @@ def plan_remesh(old_shape: dict[str, int], n_alive: int) -> RemeshPlan:
         note=("model axis preserved; DP shrunk" if m == model else
               "model axis shrunk — full reshard via checkpoint restore"),
     )
+
+
+def mesh_from_plan(plan: RemeshPlan, *, devices=None):
+    """Materialize the planned mesh (step 3 of the recovery path): axis order
+    follows the old mesh's, construction goes through the portability layer
+    so the restart works on every supported JAX."""
+    names = tuple(plan.new_shape)
+    shape = tuple(plan.new_shape[n] for n in names)
+    return compat.make_mesh(shape, names, devices=devices)
 
 
 def _largest_pow2(n: int) -> int:

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
+
 Params = Any
 
 __all__ = ["pipeline_forward", "bubble_fraction"]
@@ -49,7 +51,7 @@ def pipeline_forward(mesh: Mesh, stage_fn: Callable[[Params, jax.Array],
     def run(params, micro):
         # inside shard_map: params [1, ...] (this stage's slice),
         # micro [n_micro, mb, ...] (replicated input stream)
-        params = jax.tree.map(lambda a: a[0], params)
+        params = compat.tree_map(lambda a: a[0], params)
         stage = jax.lax.axis_index("stage")
         n_ticks = n_micro + n_stages - 1
         buf = jnp.zeros_like(micro[0])                 # current activation
@@ -84,7 +86,7 @@ def pipeline_forward(mesh: Mesh, stage_fn: Callable[[Params, jax.Array],
             [((n_stages - 1 + i) % n_stages, i) for i in range(n_stages)])
         return outs
 
-    out = jax.shard_map(
+    out = compat.shard_map(
         run, mesh=mesh,
         in_specs=(P("stage"), P()),
         out_specs=P(),

@@ -22,8 +22,9 @@ from __future__ import annotations
 import re
 from typing import Any
 
-import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import compat
 
 Params = Any
 
@@ -126,13 +127,13 @@ def param_pspec(path, leaf, mesh: Mesh) -> P:
 
 def param_shardings(mesh: Mesh, params: Params) -> Params:
     """NamedSharding tree matching ``params`` (works on ShapeDtypeStructs)."""
-    return jax.tree_util.tree_map_with_path(
+    return compat.tree_map_with_path(
         lambda path, leaf: NamedSharding(mesh, param_pspec(path, leaf, mesh)),
         params)
 
 
 def tree_shardings(mesh: Mesh, tree: Params, pspec_fn) -> Params:
-    return jax.tree_util.tree_map_with_path(
+    return compat.tree_map_with_path(
         lambda path, leaf: NamedSharding(mesh, pspec_fn(path, leaf)), tree)
 
 
@@ -159,7 +160,7 @@ def batch_shardings(mesh: Mesh, batch: Params) -> Params:
             return P(*full)
         return P()
 
-    return jax.tree_util.tree_map_with_path(
+    return compat.tree_map_with_path(
         lambda path, leaf: NamedSharding(mesh, spec(path, leaf)), batch)
 
 
@@ -193,5 +194,5 @@ def cache_shardings(mesh: Mesh, cache: Params) -> Params:
             s[-1] = "model"
         return P(*s)
 
-    return jax.tree_util.tree_map_with_path(
+    return compat.tree_map_with_path(
         lambda path, leaf: NamedSharding(mesh, spec(path, leaf)), cache)

@@ -1,4 +1,10 @@
-"""Public wrapper for flash attention: padding, auto-interpret, fallbacks.
+"""Public wrapper for flash attention: padding, backend select, fallbacks.
+
+Backend select (once per process, on first call, via
+``repro.compat.kernel_backend`` — lazy so importing never initializes jax):
+Pallas-TPU (compiled) → Pallas-interpret (CPU/GPU emulation) → pure-XLA
+reference. The reference path is also taken for shapes the kernel cannot
+tile exactly.
 
 Padding strategy: Sq/Skv are padded to the block sizes with zeros; padded KV
 columns would corrupt the softmax, so for non-causal use the ref path when
@@ -13,10 +19,20 @@ import functools
 
 import jax
 
-from repro.kernels.flash_attention import kernel as _kernel
+from repro import compat
 from repro.kernels.flash_attention import ref as _ref
 
-__all__ = ["flash_attention"]
+# None iff Pallas is absent (the xla tier); backend probing stays lazy so
+# importing this module never initializes jax device state.
+_kernel = compat.import_pallas_kernel("repro.kernels.flash_attention.kernel")
+
+__all__ = ["flash_attention", "KERNEL_BACKEND"]
+
+
+def __getattr__(name: str) -> str:
+    if name == "KERNEL_BACKEND":    # public, resolved on first access
+        return compat.kernel_backend_for(_kernel)
+    raise AttributeError(name)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
@@ -26,8 +42,10 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     block_k: int = 512,
                     interpret: bool | None = None) -> jax.Array:
     """q [B,H,Sq,dh], k/v [B,Hkv,Skv,dh] -> [B,H,Sq,dh]."""
+    if compat.kernel_backend_for(_kernel) == "xla":
+        return _ref.attention_ref(q, k, v, causal=causal)
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = compat.pallas_interpret_default()
     sq, skv = q.shape[2], k.shape[2]
     block_q = min(block_q, sq)
     block_k = min(block_k, skv)

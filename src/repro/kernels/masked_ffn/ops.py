@@ -1,8 +1,11 @@
 """Public wrapper for the masked_ffn Pallas kernel.
 
-Handles: MXU-alignment padding (exact — see kernel.py docstring), automatic
-interpret mode off-TPU, and a convenience entry point that takes unpacked
-weights + masks and does the offline packing (mask-zero skipping) itself.
+Handles: backend select once per process on first call (Pallas-TPU →
+Pallas-interpret → pure-XLA reference, via ``repro.compat.kernel_backend``,
+lazy so importing never initializes jax devices), MXU-alignment
+padding (exact — see kernel.py docstring), and a convenience entry point
+that takes unpacked weights + masks and does the offline packing
+(mask-zero skipping) itself.
 """
 
 from __future__ import annotations
@@ -13,15 +16,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core import packing
-from repro.kernels.masked_ffn import kernel as _kernel
 from repro.kernels.masked_ffn import ref as _ref
 
-__all__ = ["masked_ffn", "masked_ffn_all_samples", "on_tpu"]
+# None iff Pallas is absent (the xla tier); backend probing stays lazy so
+# importing this module never initializes jax device state.
+_kernel = compat.import_pallas_kernel("repro.kernels.masked_ffn.kernel")
+
+__all__ = ["masked_ffn", "masked_ffn_all_samples", "on_tpu",
+           "KERNEL_BACKEND"]
+
+
+def __getattr__(name: str) -> str:
+    if name == "KERNEL_BACKEND":    # public, resolved on first access
+        return compat.kernel_backend_for(_kernel)
+    raise AttributeError(name)
 
 
 def on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+    return compat.on_tpu()
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -46,8 +60,10 @@ def masked_ffn(x: jax.Array, w1p: jax.Array, b1p: jax.Array,
     Zero-padding D/K/D2 to 128 and B to block_b is exact (relu(0)=0 and the
     padded w2p rows are zero). interpret=None -> auto (True off-TPU).
     """
+    if compat.kernel_backend_for(_kernel) == "xla":
+        return _ref.masked_ffn_ref(x, w1p, b1p, w2p, b2)
     if interpret is None:
-        interpret = not on_tpu()
+        interpret = compat.pallas_interpret_default()
     b, d2 = x.shape[0], w2p.shape[-1]
     block_b = min(block_b, max(8, 1 << (b - 1).bit_length()))
     xp = _pad_to(_pad_to(x, 1, 128), 0, block_b)

@@ -1,4 +1,5 @@
-"""Public wrapper for the moments kernel: padding + auto-interpret."""
+"""Public wrapper for the moments kernel: padding + backend select
+(Pallas-TPU → Pallas-interpret → pure-XLA ref, probed once on first call)."""
 
 from __future__ import annotations
 
@@ -7,10 +8,20 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.moments import kernel as _kernel
+from repro import compat
 from repro.kernels.moments import ref as _ref
 
-__all__ = ["moments"]
+# None iff Pallas is absent (the xla tier); backend probing stays lazy so
+# importing this module never initializes jax device state.
+_kernel = compat.import_pallas_kernel("repro.kernels.moments.kernel")
+
+__all__ = ["moments", "KERNEL_BACKEND"]
+
+
+def __getattr__(name: str) -> str:
+    if name == "KERNEL_BACKEND":    # public, resolved on first access
+        return compat.kernel_backend_for(_kernel)
+    raise AttributeError(name)
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
@@ -19,8 +30,10 @@ def moments(samples: jax.Array, *, block_b: int = 256,
     """samples [N, B, P] -> (mean, std) [B, P]. Pads B to the block and P to
     the lane width; padded entries are sliced off (padding never mixes into
     real outputs because the reduction is over N only)."""
+    if compat.kernel_backend_for(_kernel) == "xla":
+        return _ref.moments_ref(samples)
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = compat.pallas_interpret_default()
     n, b, p = samples.shape
     block_b = min(block_b, max(8, 1 << (b - 1).bit_length()))
     pad_b, pad_p = (-b) % block_b, (-p) % 128

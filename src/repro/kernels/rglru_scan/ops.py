@@ -1,4 +1,5 @@
-"""Public wrapper for the RG-LRU scan kernel: padding + auto-interpret.
+"""Public wrapper for the RG-LRU scan kernel: padding + backend select
+(Pallas-TPU → Pallas-interpret → pure-XLA ref, probed once on first call).
 
 Padding is exact: extra channels run an independent recurrence on zeros,
 extra batch rows likewise; both are sliced off. Time is never padded
@@ -13,18 +14,30 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.rglru_scan import kernel as _kernel
+from repro import compat
 from repro.kernels.rglru_scan import ref as _ref
 
-__all__ = ["rglru_scan"]
+# None iff Pallas is absent (the xla tier); backend probing stays lazy so
+# importing this module never initializes jax device state.
+_kernel = compat.import_pallas_kernel("repro.kernels.rglru_scan.kernel")
+
+__all__ = ["rglru_scan", "KERNEL_BACKEND"]
+
+
+def __getattr__(name: str) -> str:
+    if name == "KERNEL_BACKEND":    # public, resolved on first access
+        return compat.kernel_backend_for(_kernel)
+    raise AttributeError(name)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def rglru_scan(a: jax.Array, b: jax.Array, *,
                interpret: bool | None = None) -> jax.Array:
     """a, b [B, S, W] -> h [B, S, W]."""
+    if compat.kernel_backend_for(_kernel) == "xla":
+        return _ref.rglru_scan_ref(a, b)
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = compat.pallas_interpret_default()
     bsz, s, w = a.shape
     block_b = min(8, bsz)
     block_s = min(256, s)

@@ -34,6 +34,7 @@ import time
 import jax
 import numpy as np
 
+from repro import compat
 from repro.configs import SHAPES, get_config
 from repro.configs.cells import skip_reason
 from repro.core.latency_model import V5E, roofline_terms
@@ -189,7 +190,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
         shape = _dc.replace(shape, global_batch=shape.global_batch * bayesian)
     model = build_model(cfg)
     mesh = make_production_mesh(multi_pod=multi_pod)
-    jax.sharding.set_mesh(mesh)
+    compat.set_mesh(mesh)
 
     if shape.kind == "train":
         opt_cfg = pick_optimizer(cfg)
@@ -431,6 +432,7 @@ def analyze(lowered, meta, *, hlo_dump: str | None = None,
     compile_s = time.time() - t0
 
     result: dict = {
+        "env": compat.version_summary(),
         "arch": cfg.arch_id, "shape": shape.name, "kind": meta["kind"],
         "mesh": dict(zip(mesh.axis_names,
                          (mesh.shape[a] for a in mesh.axis_names))),

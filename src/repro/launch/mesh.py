@@ -4,11 +4,15 @@
 importing this module touches no jax device state — the dry-run must set
 XLA_FLAGS before first jax init, and tests/benches must keep seeing 1 CPU
 device.
+
+Mesh construction goes through ``repro.compat.make_mesh``, which requests
+all-Auto axis types on JAX versions that have explicit axis types and omits
+them where the concept does not exist.
 """
 
 from __future__ import annotations
 
-import jax
+from repro import compat
 
 __all__ = ["make_production_mesh", "make_cpu_mesh", "SINGLE_POD_SHAPE",
            "MULTI_POD_SHAPE"]
@@ -20,12 +24,10 @@ MULTI_POD_SHAPE = (2, 16, 16)            # 2 pods = 512 chips
 def make_production_mesh(*, multi_pod: bool = False):
     shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=types)
+    return compat.make_mesh(shape, axes)
 
 
 def make_cpu_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     """Small host-device mesh for CPU tests (requires the test process to
     have set --xla_force_host_platform_device_count)."""
-    types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=types)
+    return compat.make_mesh(shape, axes)

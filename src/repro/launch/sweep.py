@@ -61,6 +61,7 @@ def run_cell(cell, mesh: str, out_dir: str, timeout: int = 3600,
 
 
 def report(out_dir: str) -> None:
+    envs = set()
     for mesh in ("single", "multi"):
         d = os.path.join(out_dir, mesh)
         if not os.path.isdir(d):
@@ -73,6 +74,9 @@ def report(out_dir: str) -> None:
         for fn in sorted(os.listdir(d)):
             with open(os.path.join(d, fn)) as f:
                 r = json.load(f)
+            env = r.get("env", {})
+            if env:
+                envs.add((env.get("jax", "?"), env.get("backend", "?")))
             name = f"{r.get('arch','?')}/{r.get('shape','?')}"
             if "skipped" in r:
                 print(f"{name:42s} {'SKIP':10s}  ({r['skipped'][:60]})")
@@ -89,6 +93,9 @@ def report(out_dir: str) -> None:
                   f"{rf.get('collective_s', 0):10.4f} "
                   f"{rf.get('dominant', '?'):>10s} "
                   f"{(frac or 0) * 100:8.2f}%")
+    if envs:
+        print("\nproduced under: " + "; ".join(
+            f"jax {v} ({b})" for v, b in sorted(envs)))
 
 
 def main(argv=None) -> int:

@@ -22,12 +22,14 @@ exceeds a threshold can be flagged for escalation (the paper's clinical
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core import masksembles, uncertainty as unc_lib
 from repro.models.model import Model
 
@@ -44,18 +46,27 @@ class ServeConfig:
     uncertainty_threshold: float = 0.5   # flag tokens above this rel-unc
 
 
+def _mesh_scope(mesh):
+    """Serving under a device mesh: scope the decode loop to ``mesh`` via the
+    portability layer (no-op when serving single-device)."""
+    return compat.use_mesh(mesh) if mesh is not None \
+        else contextlib.nullcontext()
+
+
 def generate(model: Model, params: Params, tokens: jax.Array,
-             cfg: ServeConfig = ServeConfig()) -> jax.Array:
+             cfg: ServeConfig = ServeConfig(), *, mesh=None) -> jax.Array:
     """Greedy generation: tokens [B, S] -> [B, S + max_new_tokens]."""
     b, s = tokens.shape
     max_seq = s + cfg.max_new_tokens
-    logits, cache = model.prefill(params, {"tokens": tokens},
-                                  max_seq=max_seq)
-    out = [jnp.argmax(logits, -1).astype(jnp.int32)]
-    for i in range(cfg.max_new_tokens - 1):
-        logits, cache = model.decode_step(params, cache, out[-1][:, None],
-                                          jnp.int32(s + i))
-        out.append(jnp.argmax(logits, -1).astype(jnp.int32))
+    with _mesh_scope(mesh):
+        logits, cache = model.prefill(params, {"tokens": tokens},
+                                      max_seq=max_seq)
+        out = [jnp.argmax(logits, -1).astype(jnp.int32)]
+        for i in range(cfg.max_new_tokens - 1):
+            logits, cache = model.decode_step(params, cache,
+                                              out[-1][:, None],
+                                              jnp.int32(s + i))
+            out.append(jnp.argmax(logits, -1).astype(jnp.int32))
     return jnp.concatenate([tokens, jnp.stack(out, 1)], axis=1)
 
 
@@ -95,7 +106,7 @@ def _decode_with_ids(model, params, caches, tokens, pos, mask_ids):
 
 
 def serve_uncertain(model: Model, params: Params, tokens: jax.Array,
-                    cfg: ServeConfig = ServeConfig()):
+                    cfg: ServeConfig = ServeConfig(), *, mesh=None):
     """Bayesian generation with per-token uncertainty.
 
     Returns (generated [B, S+T], rel_uncertainty [B, T], flags [B, T]).
@@ -110,22 +121,22 @@ def serve_uncertain(model: Model, params: Params, tokens: jax.Array,
     xt = _expand_for_masks(tokens, n)                    # [N*B, S]
     mask_ids = jnp.repeat(jnp.arange(n), b)
     from repro.models import transformer
-    logits, caches = transformer.prefill(model.cfg, params, {"tokens": xt},
-                                         max_seq=max_seq, mask_ids=mask_ids)
     outs, uncs = [], []
-    logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
-    mean, _ = unc_lib.predictive_moments(logp.reshape(n, b, -1))
-    cur = jnp.argmax(mean, -1).astype(jnp.int32)
-    for i in range(cfg.max_new_tokens):
-        outs.append(cur)
-        if i == cfg.max_new_tokens - 1:
-            # still need the uncertainty of the last emitted token
-            pass
-        step_tok = _expand_for_masks(cur, n)[:, None]
-        mean, rel_unc, caches = uncertainty_decode_step(
-            model, params, caches, step_tok, jnp.int32(s + i))
-        uncs.append(rel_unc)
+    with _mesh_scope(mesh):
+        logits, caches = transformer.prefill(model.cfg, params,
+                                             {"tokens": xt},
+                                             max_seq=max_seq,
+                                             mask_ids=mask_ids)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        mean, _ = unc_lib.predictive_moments(logp.reshape(n, b, -1))
         cur = jnp.argmax(mean, -1).astype(jnp.int32)
+        for i in range(cfg.max_new_tokens):
+            outs.append(cur)
+            step_tok = _expand_for_masks(cur, n)[:, None]
+            mean, rel_unc, caches = uncertainty_decode_step(
+                model, params, caches, step_tok, jnp.int32(s + i))
+            uncs.append(rel_unc)
+            cur = jnp.argmax(mean, -1).astype(jnp.int32)
     gen = jnp.concatenate([tokens, jnp.stack(outs, 1)], 1)
     unc = jnp.stack(uncs, 1)
     flags = unc > cfg.uncertainty_threshold

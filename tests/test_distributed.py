@@ -241,6 +241,7 @@ def test_elastic_restart_end_to_end():
     resharding, keep the global batch via grad accumulation, train on."""
     code = """
 import jax, jax.numpy as jnp, numpy as np, tempfile
+from repro import compat
 from repro.configs import registry
 from repro.models import build_model
 from repro.optim import OptimizerConfig, build_optimizer
@@ -254,11 +255,11 @@ opt = build_optimizer(OptimizerConfig(lr=1e-3))
 data = LMDataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=8)
 state = train_state_init(model, opt, jax.random.PRNGKey(0))
 
-mesh_a = jax.make_mesh((4, 2), ("data", "model"))
-jax.sharding.set_mesh(mesh_a)
+mesh_a = compat.make_mesh((4, 2), ("data", "model"))
+compat.set_mesh(mesh_a)
 sh_a = sharding.param_shardings(mesh_a, jax.eval_shape(lambda: state))
 step = make_train_step(model, opt, TrainConfig())
-stepj = jax.jit(step, in_shardings=(sh_a, None))
+stepj = jax.jit(step, in_shardings=(sh_a, None), out_shardings=(sh_a, None))
 state = jax.device_put(state, sh_a)
 for i in range(3):
     state, m = stepj(state, lm_batch(data, i))
@@ -270,15 +271,14 @@ with tempfile.TemporaryDirectory() as d:
     assert plan.new_shape["model"] == 2, plan       # TP preserved
     accum = elastic.grad_accum_for_batch(8, old_dp=4,
                                          new_dp=plan.new_shape["data"])
-    mesh_b = jax.make_mesh((plan.new_shape["data"],
-                            plan.new_shape["model"]), ("data", "model"))
-    jax.sharding.set_mesh(mesh_b)
+    mesh_b = elastic.mesh_from_plan(plan)
+    compat.set_mesh(mesh_b)
     sh_b = sharding.param_shardings(mesh_b, jax.eval_shape(lambda: state))
     restored, _ = CKPT.restore_checkpoint(d, 3, jax.eval_shape(lambda: state),
                                           sh_b)
     step_b = jax.jit(make_train_step(model, opt,
                                      TrainConfig(grad_accum=accum)),
-                     in_shardings=(sh_b, None))
+                     in_shardings=(sh_b, None), out_shardings=(sh_b, None))
     restored, m2 = step_b(restored, lm_batch(data, 3))   # same batch 3!
     assert np.isfinite(float(m2["loss"]))
 print("ELASTIC_OK", plan.new_shape, "accum", accum)
@@ -320,6 +320,7 @@ print("PIPE_OK", pipeline.bubble_fraction(4, 4))
 def test_sharded_train_step_runs_and_matches_single_device():
     code = """
 import jax, jax.numpy as jnp, numpy as np
+from repro import compat
 from repro.configs import registry
 from repro.models import build_model
 from repro.optim import OptimizerConfig, build_optimizer
@@ -337,8 +338,8 @@ batch = lm_batch(data, 0)
 # single device reference
 s1, m1 = jax.jit(step)(state, batch)
 # sharded across a (4, 2) mesh
-mesh = jax.make_mesh((4, 2), ("data", "model"))
-jax.sharding.set_mesh(mesh)
+mesh = compat.make_mesh((4, 2), ("data", "model"))
+compat.set_mesh(mesh)
 st_sh = sharding.param_shardings(mesh, jax.eval_shape(lambda: state))
 b_sh = sharding.batch_shardings(mesh, jax.eval_shape(lambda: batch))
 stepj = jax.jit(step, in_shardings=(st_sh, b_sh), out_shardings=(st_sh, None))
