@@ -1,11 +1,16 @@
-"""Fill cells missing from results/dryrun with the archived v1 sweep
-results, marked `probe_version: v1-scan-body-once` (their FLOP/byte terms
-under-count loop bodies — documented in EXPERIMENTS §Measurement-notes;
-memory + compile-proof fields are identical between versions)."""
+"""One-off maintenance script: fill cells missing from results/dryrun with
+the archived v1 sweep results, marked `probe_version: v1-scan-body-once`
+(their FLOP/byte terms under-count loop bodies — documented in EXPERIMENTS
+§Measurement-notes; memory + compile-proof fields are identical between
+versions).
+
+Run from the repo root; expects results/dryrun_v1/{single,multi} (the
+archived sweep) next to results/dryrun. A no-op when the archive is absent —
+kept under benchmarks/ as the provenance record of how mixed-version dryrun
+tables were produced, not as part of any current pipeline."""
 
 import json
 import os
-import shutil
 
 for mesh in ("single", "multi"):
     src = f"results/dryrun_v1/{mesh}"

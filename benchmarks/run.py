@@ -1,20 +1,28 @@
 """Benchmark aggregator — one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run [--smoke]
 
 Emits ``name,value,derived`` CSV lines (plus each benchmark's own report).
+``--smoke`` runs the serving bench on its tiny CI trace (the other benches
+are already CPU-sized).
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny serving trace (CI-sized)")
+    args = ap.parse_args()
+
     from benchmarks import (bench_algorithm, bench_kernels,
                             bench_latency_model, bench_roofline,
-                            bench_schedule)
+                            bench_schedule, bench_serving)
 
     csv: list[tuple[str, float, str]] = []
 
@@ -59,6 +67,16 @@ def main() -> None:
                 ker["weight_fetches_sampling_level"]
                 / ker["weight_fetches_batch_level"],
                 "BlockSpec revisit counts"))
+
+    print()
+    print("=" * 72)
+    print("bench_serving — continuous batching vs looped one-shot serving")
+    print("=" * 72)
+    srv = bench_serving.run(smoke=args.smoke)
+    csv.append(("serving_continuous_batching_speedup", srv["speedup"],
+                "server tok/s over looped serve_uncertain, Poisson trace"))
+    csv.append(("serving_uncertainty_max_delta", srv["max_unc_delta"],
+                "per-token rel-unc |server - one-shot|"))
 
     print()
     print("=" * 72)

@@ -22,3 +22,7 @@ fi
 # Tier-1 verify (ROADMAP.md): the whole suite, quiet, fail-fast off so the
 # summary shows every regression.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q
+
+# Serving smoke: replay a tiny Poisson trace through the continuous-batching
+# server and the looped one-shot path; exits nonzero if their tokens diverge.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_serving --smoke

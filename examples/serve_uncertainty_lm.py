@@ -2,22 +2,41 @@
 per-token uncertainty, on any assigned architecture (reduced config).
 
     PYTHONPATH=src python examples/serve_uncertainty_lm.py \
-        [--arch qwen2-1.5b] [--tokens 12]
+        [--arch qwen2-1.5b] [--tokens 12] [--server]
 
 Every request is evaluated under N fixed Masksembles masks (no runtime RNG);
 the decode loop reports the relative uncertainty of each emitted token and
 flags tokens above the threshold — the LM analogue of the paper's clinical
 escalation pathway.
+
+Default mode drives the one-shot engine (`serve_uncertain`: one fixed batch
+to completion). ``--server`` drives the same requests through the
+continuous-batching server instead — an admission queue feeding a
+``N_masks x max_slots`` KV slot pool with jitted fixed-shape steps — and
+prints the serving metrics (tokens/s, latency percentiles, slot occupancy).
+Both paths produce identical tokens and uncertainties; the server is how
+the batch-level mask schedule amortizes over live traffic.
 """
 
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import registry
 from repro.models import build_model
-from repro.serving import ServeConfig, serve_uncertain
+from repro.serving import (BayesianLMServer, ServeConfig, ServerConfig,
+                           serve_uncertain)
+
+
+def _print_request(i, tokens, uncs, flags, threshold):
+    toks = " ".join(f"{int(t):4d}" for t in tokens)
+    unc = " ".join(f"{float(u):4.2f}" for u in uncs)
+    flg = " ".join("   ^" if bool(f) else "    " for f in flags)
+    print(f"req {i}: tokens  {toks}")
+    print(f"       rel-unc {unc}")
+    if any(flags):
+        print(f"               {flg}  <- above threshold "
+              f"{threshold} (escalate)")
 
 
 def main() -> None:
@@ -27,6 +46,13 @@ def main() -> None:
     ap.add_argument("--tokens", type=int, default=12)
     ap.add_argument("--n-masks", type=int, default=4)
     ap.add_argument("--threshold", type=float, default=0.35)
+    ap.add_argument("--server", action="store_true",
+                    help="route requests through the continuous-batching "
+                         "server (queue -> slots -> mask groups)")
+    ap.add_argument("--requests", type=int, default=4,
+                    help="request count in --server mode")
+    ap.add_argument("--slots", type=int, default=2,
+                    help="KV slot-pool size in --server mode")
     args = ap.parse_args()
 
     cfg = registry.smoke_config(args.arch, mask_samples=args.n_masks)
@@ -34,6 +60,30 @@ def main() -> None:
         raise SystemExit(f"{args.arch} is encoder-only; pick a decoder arch")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    print(f"arch={args.arch} (reduced), N={args.n_masks} fixed masks")
+
+    if args.server:
+        prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                     (args.requests, 8), 0, cfg.vocab_size)
+        server = BayesianLMServer(model, params, ServerConfig(
+            max_slots=args.slots, max_prompt_len=8,
+            max_new_tokens=args.tokens,
+            uncertainty_threshold=args.threshold))
+        rids = [server.submit(p) for p in prompts]
+        summary = server.run()
+        total_flagged = 0
+        for i, rid in enumerate(rids):
+            st = server.result(rid)
+            _print_request(i, st.generated, st.uncertainty, st.flags,
+                           args.threshold)
+            total_flagged += sum(st.flags)
+        print(f"\nflagged {total_flagged}/"
+              f"{sum(len(server.result(r).generated) for r in rids)} tokens"
+              f" for review")
+        print(f"\n-- serving metrics ({args.slots} slots x "
+              f"{args.n_masks} mask rows each) --")
+        print(summary.format())
+        return
 
     prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
                                  cfg.vocab_size)
@@ -41,17 +91,8 @@ def main() -> None:
         model, params, prompts,
         ServeConfig(max_new_tokens=args.tokens,
                     uncertainty_threshold=args.threshold))
-
-    print(f"arch={args.arch} (reduced), N={args.n_masks} fixed masks")
     for i in range(gen.shape[0]):
-        toks = " ".join(f"{int(t):4d}" for t in gen[i, 8:])
-        uncs = " ".join(f"{float(u):4.2f}" for u in unc[i])
-        flg = " ".join("   ^" if bool(f) else "    " for f in flags[i])
-        print(f"req {i}: tokens  {toks}")
-        print(f"       rel-unc {uncs}")
-        if flags[i].any():
-            print(f"               {flg}  <- above threshold "
-                  f"{args.threshold} (escalate)")
+        _print_request(i, gen[i, 8:], unc[i], flags[i], args.threshold)
     print(f"\nflagged {int(flags.sum())}/{flags.size} tokens for review")
 
 

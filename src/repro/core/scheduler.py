@@ -30,6 +30,7 @@ ApplyFn = Callable[[Params, jax.Array, int | jax.Array], jax.Array]
 
 __all__ = [
     "Schedule",
+    "SlotSchedule",
     "run_sampling_level",
     "run_batch_level",
     "run",
@@ -53,6 +54,55 @@ class Schedule:
     def __post_init__(self) -> None:
         if self.kind not in ("sampling", "batch"):
             raise ValueError(f"unknown schedule kind {self.kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotSchedule:
+    """Row layout of the continuous-batching serving pool (serving/server.py).
+
+    The pooled KV cache holds ``n_masks * max_slots`` batch rows, mask-major:
+    row ``m * max_slots + s`` is mask-sample ``m`` of slot ``s``. One request
+    occupies one *slot group* — the ``n_masks`` rows of a single slot — so
+    the mask-id vector is a constant (``mask_ids()``), the batch-level
+    schedule applies to every decode step regardless of which requests are
+    resident, and admitting/freeing a request touches exactly
+    ``rows_for_slot(s)``.
+    """
+    n_masks: int
+    max_slots: int
+
+    def __post_init__(self) -> None:
+        if self.n_masks < 1 or self.max_slots < 1:
+            raise ValueError(f"bad slot schedule {self}")
+
+    @property
+    def rows(self) -> int:
+        """Total batch rows of the pooled cache."""
+        return self.n_masks * self.max_slots
+
+    def mask_ids(self) -> jax.Array:
+        """Constant per-row mask assignment [rows] (mask-major groups —
+        the same contiguous-group layout as masksembles.mask_ids_for_batch)."""
+        return jnp.repeat(jnp.arange(self.n_masks), self.max_slots)
+
+    def rows_for_slot(self, slot) -> jax.Array:
+        """Batch rows of slot ``slot``'s group, one per mask [n_masks]."""
+        return jnp.arange(self.n_masks) * self.max_slots + \
+            jnp.asarray(slot, jnp.int32)
+
+    def row_values(self, per_slot: jax.Array) -> jax.Array:
+        """Broadcast a per-slot vector [max_slots] to per-row [rows]
+        (e.g. per-slot decode positions -> per-row cache positions)."""
+        return jnp.tile(jnp.asarray(per_slot), (self.n_masks,))
+
+    def decode_traffic(self, d_in: int, k_hidden: int, d_out: int,
+                       bytes_per_el: int = 2) -> TrafficModel:
+        """Per-decode-step FFN traffic of a full pool: the batch-level
+        schedule over ``max_slots`` resident requests — the quantity
+        continuous batching amortizes (weights touched N times per step no
+        matter how many requests are in flight)."""
+        return traffic_model(Schedule("batch"), self.max_slots, self.n_masks,
+                             d_in, k_hidden, d_out, bytes_per_el)
 
 
 def run_batch_level(apply_fn: ApplyFn, params: Params, x: jax.Array,

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = [
+    "REL_UNC_EPS",
     "predictive_moments",
     "relative_uncertainty",
     "rmse",
@@ -23,6 +24,13 @@ __all__ = [
     "RequirementReport",
     "check_requirements",
 ]
+
+# Floor on |mean| in the relative-uncertainty ratio std/|mean| — one
+# constant for every consumer (this module's relative_uncertainty and the
+# serving decode path). Kept at a pure divide-by-zero guard: a larger floor
+# (the serving path once used 1e-6) silently caps the reported ratio for
+# near-zero means instead of reporting the actual metric.
+REL_UNC_EPS = 1e-12
 
 
 def predictive_moments(samples: jax.Array, axis: int = 0) -> tuple[jax.Array, jax.Array]:
@@ -34,7 +42,7 @@ def predictive_moments(samples: jax.Array, axis: int = 0) -> tuple[jax.Array, ja
 
 
 def relative_uncertainty(samples: jax.Array, axis: int = 0,
-                         eps: float = 1e-12) -> jax.Array:
+                         eps: float = REL_UNC_EPS) -> jax.Array:
     """Paper's metric: std / |mean| per prediction (relative variance)."""
     mean, std = predictive_moments(samples, axis=axis)
     return std / jnp.maximum(jnp.abs(mean), eps)

@@ -304,13 +304,17 @@ def attention_banded(q: jax.Array, k: jax.Array, v: jax.Array, *,
 def attention_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      kpos: jax.Array, pos: jax.Array) -> jax.Array:
     """One-token decode: q [B,H,1,dh] vs cache [B,Hkv,Smax,dh]. ``kpos``
-    [Smax] holds the global position stored in each cache slot (-1 = empty);
-    slots with kpos > pos or kpos < 0 are masked (covers both the linear
-    cache and the rolling local-window cache)."""
+    [B,Smax] holds the global position stored in each row's cache slot
+    (-1 = empty); slots with kpos > pos or kpos < 0 are masked (covers both
+    the linear cache and the rolling local-window cache). ``pos`` is a
+    scalar (whole batch at one position) or per-row [B] (continuous
+    batching: every row decodes at its own position)."""
     dh = q.shape[-1]
     s = _grouped_scores(q, k_cache) / math.sqrt(dh)     # [B,Hkv,G,1,Smax]
-    valid = (kpos >= 0) & (kpos <= pos)
-    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    pos = jnp.asarray(pos, jnp.int32)
+    qpos = pos[:, None] if pos.ndim else pos
+    valid = (kpos >= 0) & (kpos <= qpos)                # [B,Smax]
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return _grouped_combine(p, v_cache)
 
@@ -325,7 +329,7 @@ def init_kv_cache(batch: int, n_kv: int, max_seq: int, dh: int, dtype
     return {
         "k": jnp.zeros((batch, n_kv, max_seq, dh), dtype),
         "v": jnp.zeros((batch, n_kv, max_seq, dh), dtype),
-        "kpos": jnp.full((max_seq,), -1, jnp.int32),
+        "kpos": jnp.full((batch, max_seq), -1, jnp.int32),
     }
 
 
@@ -334,20 +338,32 @@ def kv_cache_specs(batch: int, n_kv: int, max_seq: int, dh: int, dtype
     return {
         "k": jax.ShapeDtypeStruct((batch, n_kv, max_seq, dh), dtype),
         "v": jax.ShapeDtypeStruct((batch, n_kv, max_seq, dh), dtype),
-        "kpos": jax.ShapeDtypeStruct((max_seq,), jnp.int32),
+        "kpos": jax.ShapeDtypeStruct((batch, max_seq), jnp.int32),
     }
 
 
 def kv_cache_update(cache: Params, k_new: jax.Array, v_new: jax.Array,
                     pos: jax.Array, window: int = 0) -> Params:
-    """Write one step's K/V at slot ``pos`` (or ``pos % W`` rolling)."""
-    smax = cache["k"].shape[2]
-    slot = (pos % window) if window else pos
-    slot = jnp.asarray(slot, jnp.int32) % smax
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=2)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=2)
-    kpos = jax.lax.dynamic_update_slice_in_dim(
-        cache["kpos"], jnp.asarray(pos, jnp.int32)[None], slot, axis=0)
+    """Write one step's K/V at slot ``pos`` (or ``pos % W`` rolling).
+
+    ``pos`` is a scalar (uniform batch — one dynamic-slice write) or a
+    per-row [B] vector (continuous batching — each row writes its own slot
+    via a batched scatter)."""
+    b, _, smax, _ = cache["k"].shape
+    pos = jnp.asarray(pos, jnp.int32)
+    slot = ((pos % window) if window else pos) % smax
+    if pos.ndim == 0:
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot,
+                                                axis=2)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot,
+                                                axis=2)
+        kpos = jax.lax.dynamic_update_slice_in_dim(
+            cache["kpos"], jnp.broadcast_to(pos, (b, 1)), slot, axis=1)
+        return {"k": k, "v": v, "kpos": kpos}
+    bidx = jnp.arange(b)
+    k = cache["k"].at[bidx, :, slot].set(k_new[:, :, 0])
+    v = cache["v"].at[bidx, :, slot].set(v_new[:, :, 0])
+    kpos = cache["kpos"].at[bidx, slot].set(pos)
     return {"k": k, "v": v, "kpos": kpos}
 
 

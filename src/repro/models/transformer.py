@@ -38,7 +38,8 @@ from repro.models import layers, moe as moe_lib, rglru, xlstm
 Params = dict[str, Any]
 
 __all__ = ["init", "forward", "prefill", "decode_step", "init_cache",
-           "cache_specs"]
+           "cache_specs", "cache_scatter_rows", "cache_gather_rows",
+           "cache_reset_rows"]
 
 
 # ---------------------------------------------------------------------------
@@ -151,6 +152,42 @@ def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
     return _cache_tree(cfg, batch, max_seq, as_spec=True)
 
 
+# Every cache leaf — KV (k/v/kpos) and recurrent state alike — is shaped
+# [reps, batch, ...]: batch rides on axis 1. The three helpers below are the
+# slot-pool contract the serving subsystem builds on (serving/server.py):
+# a pooled cache is just a cache whose batch axis is the slot-row axis.
+
+def cache_scatter_rows(pool, fresh, rows: jax.Array):
+    """Write the rows of a small cache (batch b) into a pooled cache
+    (batch B >= b) at batch indices ``rows`` [b]. Jit-safe (rows may be
+    traced); used to prefill newly admitted requests into their slot rows
+    while in-flight rows keep decoding."""
+    return jax.tree.map(lambda p, f: p.at[:, rows].set(f), pool, fresh)
+
+
+def cache_gather_rows(pool, rows: jax.Array):
+    """View of a pooled cache restricted to batch indices ``rows`` [b] —
+    the inverse of :func:`cache_scatter_rows` (debug / slot inspection)."""
+    return jax.tree.map(lambda p: p[:, rows], pool)
+
+
+def cache_reset_rows(pool, row_mask: jax.Array):
+    """Clear the rows where ``row_mask`` [B] is True: K/V and recurrent
+    state to zero, kpos to -1 (empty). The server runs this when a slot
+    group is freed, keeping the invariant that unoccupied rows are
+    observably empty (admission would fully overwrite them anyway — this
+    makes the pool state inspectable between requests)."""
+    from repro import compat
+    mask = jnp.asarray(row_mask, bool)
+
+    def reset(path, leaf):
+        fill = -1 if "kpos" in jax.tree_util.keystr(path) else 0
+        m = mask.reshape((1, mask.shape[0]) + (1,) * (leaf.ndim - 2))
+        return jnp.where(m, jnp.asarray(fill, leaf.dtype), leaf)
+
+    return compat.tree_map_with_path(reset, pool)
+
+
 # ---------------------------------------------------------------------------
 # rope helpers
 # ---------------------------------------------------------------------------
@@ -253,6 +290,7 @@ def _attention_sublayer(cfg: ModelConfig, p: Params, x: jax.Array, rope,
                 vs = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
                 kpos = jnp.concatenate([jnp.arange(s, dtype=jnp.int32),
                                         jnp.full((pad,), -1, jnp.int32)])
+            kpos = jnp.broadcast_to(kpos[None], (x.shape[0],) + kpos.shape)
             new_cache = {"k": ks, "v": vs, "kpos": kpos}
     return x + layers.dense(p["attn"]["wo"], layers._merge_heads(attn)), \
         new_cache
@@ -481,14 +519,22 @@ def prefill(cfg: ModelConfig, params: Params, batch: Params,
 def decode_step(cfg: ModelConfig, params: Params, caches, tokens: jax.Array,
                 pos: jax.Array, mask_ids: jax.Array | None = None):
     """One serving step: tokens [B,1] + caches @ pos -> (logits [B,V],
-    new caches)."""
+    new caches).
+
+    ``pos`` is a scalar () shared by the whole batch, or a per-row [B]
+    vector — the continuous-batching form where every cache row advances
+    at its own position (serving/server.py)."""
     x = layers.embed_tokens(params["embed"], tokens)
     b = x.shape[0]
     if cfg.bayesian and mask_ids is None:
         mask_ids = masksembles.mask_ids_for_batch(b, cfg.mask_samples)
     p = jnp.asarray(pos, jnp.int32)
-    pos_arr = p[None] if not cfg.m_rope_sections else \
-        jnp.broadcast_to(p, (3, 1))
+    if p.ndim == 0:
+        pos_arr = p[None] if not cfg.m_rope_sections else \
+            jnp.broadcast_to(p, (3, 1))
+    else:
+        pos_arr = p[:, None] if not cfg.m_rope_sections else \
+            jnp.broadcast_to(p[None, :, None], (3, b, 1))
     rope = _rope(cfg, pos_arr)
     x, new_caches, _ = _run_stack(cfg, params, x, mode="decode", rope=rope,
                                   mask_ids=mask_ids, caches=caches, pos=p)

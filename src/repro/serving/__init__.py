@@ -1,2 +1,7 @@
 from repro.serving.engine import (  # noqa: F401
     ServeConfig, generate, serve_uncertain, uncertainty_decode_step)
+from repro.serving.metrics import (  # noqa: F401
+    MetricsCollector, RequestTimeline, ServingSummary)
+from repro.serving.server import (  # noqa: F401
+    BayesianLMServer, QueueFullError, Request, RequestState, ServerConfig,
+    StepFns, step_fns)

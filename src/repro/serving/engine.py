@@ -1,4 +1,4 @@
-"""Serving engine: batched generation + mask-based Bayesian serving.
+"""One-shot serving engine: batched generation + mask-based Bayesian serving.
 
 ``generate`` is the plain path (prefill -> greedy decode loop).
 
@@ -18,20 +18,26 @@ sample log-probabilities. Two schedules exist, mirroring paper Fig. 5:
 The uncertainty signal gates generation: tokens whose relative uncertainty
 exceeds a threshold can be flagged for escalation (the paper's clinical
 "adopt more comprehensive examinations" pathway, §VI-B).
+
+Both entry points are thin wrappers over the jitted fixed-shape step
+functions of :mod:`repro.serving.server` — the hot loop runs exactly the
+graphs the continuous-batching server runs, it just drives one fixed batch
+to completion instead of a request stream. Identical request batches
+therefore produce identical tokens and per-token uncertainties through
+either path (tests/test_serving_server.py).
 """
 
 from __future__ import annotations
 
-import contextlib
 import dataclasses
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro import compat
-from repro.core import masksembles, uncertainty as unc_lib
 from repro.models.model import Model
+from repro.serving import server as server_lib
+from repro.serving.server import mesh_scope
 
 Params = dict[str, Any]
 
@@ -46,27 +52,19 @@ class ServeConfig:
     uncertainty_threshold: float = 0.5   # flag tokens above this rel-unc
 
 
-def _mesh_scope(mesh):
-    """Serving under a device mesh: scope the decode loop to ``mesh`` via the
-    portability layer (no-op when serving single-device)."""
-    return compat.use_mesh(mesh) if mesh is not None \
-        else contextlib.nullcontext()
-
-
 def generate(model: Model, params: Params, tokens: jax.Array,
              cfg: ServeConfig = ServeConfig(), *, mesh=None) -> jax.Array:
     """Greedy generation: tokens [B, S] -> [B, S + max_new_tokens]."""
     b, s = tokens.shape
-    max_seq = s + cfg.max_new_tokens
-    with _mesh_scope(mesh):
-        logits, cache = model.prefill(params, {"tokens": tokens},
-                                      max_seq=max_seq)
-        out = [jnp.argmax(logits, -1).astype(jnp.int32)]
+    fns = server_lib.step_fns(model, expand_masks=False)
+    with mesh_scope(mesh):
+        mean, _, cache = fns.prefill(params, tokens,
+                                     max_seq=s + cfg.max_new_tokens)
+        out = [jnp.argmax(mean, -1).astype(jnp.int32)]
         for i in range(cfg.max_new_tokens - 1):
-            logits, cache = model.decode_step(params, cache,
-                                              out[-1][:, None],
-                                              jnp.int32(s + i))
-            out.append(jnp.argmax(logits, -1).astype(jnp.int32))
+            mean, _, cache = fns.decode(params, cache, out[-1][:, None],
+                                        jnp.int32(s + i))
+            out.append(jnp.argmax(mean, -1).astype(jnp.int32))
     return jnp.concatenate([tokens, jnp.stack(out, 1)], axis=1)
 
 
@@ -79,8 +77,9 @@ def uncertainty_decode_step(model: Model, params: Params, caches,
     """One Bayesian decode step on a mask-expanded batch [N*B, 1].
 
     Row j uses mask j // B (contiguous groups). Returns
-    (mean_logprobs [B, V], rel_uncertainty [B], new caches).
-    """
+    (mean_logprobs [B, V], rel_uncertainty [B], new caches). Unjitted
+    reference form of the server's decode step (same math via
+    server.posterior)."""
     n = model.cfg.mask_samples
     nb = tokens.shape[0]
     b = nb // n
@@ -88,14 +87,7 @@ def uncertainty_decode_step(model: Model, params: Params, caches,
     logits, caches = model.decode_step(params, caches, tokens, pos) \
         if not model.cfg.bayesian else \
         _decode_with_ids(model, params, caches, tokens, pos, mask_ids)
-    logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
-    samples = logp.reshape(n, b, -1)
-    mean, std = unc_lib.predictive_moments(samples)
-    # summary uncertainty: std of the chosen-token logprob across samples
-    tok = jnp.argmax(mean, -1)
-    per_tok_std = jnp.take_along_axis(std, tok[:, None], -1)[:, 0]
-    per_tok_mean = jnp.take_along_axis(mean, tok[:, None], -1)[:, 0]
-    rel_unc = per_tok_std / jnp.maximum(jnp.abs(per_tok_mean), 1e-6)
+    mean, rel_unc = server_lib.posterior(logits, n)
     return mean, rel_unc, caches
 
 
@@ -117,25 +109,23 @@ def serve_uncertain(model: Model, params: Params, tokens: jax.Array,
         raise ValueError("serve_uncertain requires mask_samples > 0")
     n = model.cfg.mask_samples
     b, s = tokens.shape
-    max_seq = s + cfg.max_new_tokens
+    fns = server_lib.step_fns(model)
     xt = _expand_for_masks(tokens, n)                    # [N*B, S]
-    mask_ids = jnp.repeat(jnp.arange(n), b)
-    from repro.models import transformer
     outs, uncs = [], []
-    with _mesh_scope(mesh):
-        logits, caches = transformer.prefill(model.cfg, params,
-                                             {"tokens": xt},
-                                             max_seq=max_seq,
-                                             mask_ids=mask_ids)
-        logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
-        mean, _ = unc_lib.predictive_moments(logp.reshape(n, b, -1))
+    with mesh_scope(mesh):
+        # Each step's rel-uncertainty describes the argmax of the dist that
+        # step produced, i.e. the NEXT emitted token — so token i pairs with
+        # the uncertainty from the step that chose it (prefill for token 0),
+        # and the last decode's uncertainty (an un-emitted token) is dropped.
+        mean, unc_next, caches = fns.prefill(params, xt,
+                                             max_seq=s + cfg.max_new_tokens)
         cur = jnp.argmax(mean, -1).astype(jnp.int32)
         for i in range(cfg.max_new_tokens):
             outs.append(cur)
-            step_tok = _expand_for_masks(cur, n)[:, None]
-            mean, rel_unc, caches = uncertainty_decode_step(
-                model, params, caches, step_tok, jnp.int32(s + i))
-            uncs.append(rel_unc)
+            uncs.append(unc_next)
+            mean, unc_next, caches = fns.decode(
+                params, caches, _expand_for_masks(cur, n)[:, None],
+                jnp.int32(s + i))
             cur = jnp.argmax(mean, -1).astype(jnp.int32)
     gen = jnp.concatenate([tokens, jnp.stack(outs, 1)], 1)
     unc = jnp.stack(uncs, 1)

@@ -1,0 +1,166 @@
+"""Serving metrics: request latency, throughput, slot occupancy, queue depth.
+
+The server (serving/server.py) drives one collector per run: request
+lifecycle marks (enqueue -> admit -> first token -> finish) plus one
+occupancy/queue sample per engine step. ``summary()`` folds them into the
+numbers a capacity planner wants: tokens/s, p50/p99 request latency,
+time-to-first-token, mean slot occupancy and peak queue depth.
+
+Timestamps come from an injectable clock so tests and trace replays can run
+on virtual time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+__all__ = ["RequestTimeline", "ServingSummary", "MetricsCollector"]
+
+
+@dataclasses.dataclass
+class RequestTimeline:
+    """Lifecycle marks of one request (seconds on the collector's clock)."""
+    req_id: int
+    enqueue_t: float
+    admit_t: float | None = None
+    first_token_t: float | None = None
+    finish_t: float | None = None
+    tokens_out: int = 0
+    escalated: bool = False
+
+    @property
+    def latency(self) -> float | None:
+        """enqueue -> finish (what the client waits)."""
+        if self.finish_t is None:
+            return None
+        return self.finish_t - self.enqueue_t
+
+    @property
+    def queue_wait(self) -> float | None:
+        return None if self.admit_t is None else self.admit_t - self.enqueue_t
+
+    @property
+    def ttft(self) -> float | None:
+        """Time to first token (enqueue -> first emitted token)."""
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.enqueue_t
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingSummary:
+    requests: int
+    completed: int
+    escalated: int
+    total_tokens: int
+    wall_s: float
+    tokens_per_s: float
+    latency_p50_s: float
+    latency_p99_s: float
+    ttft_p50_s: float
+    queue_wait_p50_s: float
+    mean_slot_occupancy: float     # occupied / max_slots, averaged over steps
+    peak_queue_depth: int
+    decode_steps: int
+
+    def format(self) -> str:
+        return (
+            f"requests          {self.completed}/{self.requests} completed"
+            f" ({self.escalated} escalated)\n"
+            f"throughput        {self.tokens_per_s:9.1f} tok/s"
+            f"  ({self.total_tokens} tokens / {self.wall_s:.3f} s,"
+            f" {self.decode_steps} decode steps)\n"
+            f"request latency   p50 {self.latency_p50_s * 1e3:8.1f} ms"
+            f"   p99 {self.latency_p99_s * 1e3:8.1f} ms\n"
+            f"first token       p50 {self.ttft_p50_s * 1e3:8.1f} ms"
+            f"   queue wait p50 {self.queue_wait_p50_s * 1e3:.1f} ms\n"
+            f"slot occupancy    {self.mean_slot_occupancy * 100:5.1f} %"
+            f"   peak queue depth {self.peak_queue_depth}"
+        )
+
+
+def _pct(values: list[float], q: float) -> float:
+    return float(np.percentile(np.asarray(values), q)) if values else 0.0
+
+
+class MetricsCollector:
+    """Accumulates request timelines + per-step gauge samples."""
+
+    def __init__(self, max_slots: int,
+                 clock: Callable[[], float] = time.perf_counter) -> None:
+        self.max_slots = max_slots
+        self.clock = clock
+        self.timelines: dict[int, RequestTimeline] = {}
+        self.occupancy_samples: list[int] = []
+        self.queue_depth_samples: list[int] = []
+        self.decode_steps = 0
+        self._start: float | None = None
+        self._end: float | None = None
+
+    # ---- lifecycle marks ---------------------------------------------------
+    def on_enqueue(self, req_id: int) -> None:
+        t = self.clock()
+        if self._start is None:
+            self._start = t
+        self.timelines[req_id] = RequestTimeline(req_id, enqueue_t=t)
+
+    def on_admit(self, req_id: int) -> None:
+        self.timelines[req_id].admit_t = self.clock()
+
+    def on_first_token(self, req_id: int) -> None:
+        """Mark first-token availability (at prefill argmax, which is when
+        the token is computed — one pool decode step before it is emitted
+        and counted by on_token)."""
+        tl = self.timelines[req_id]
+        if tl.first_token_t is None:
+            tl.first_token_t = self.clock()
+
+    def on_token(self, req_id: int) -> None:
+        t = self._end = self.clock()   # wall extends through every emission,
+        tl = self.timelines[req_id]    # so truncated runs aren't inflated
+        tl.tokens_out += 1
+        if tl.first_token_t is None:
+            tl.first_token_t = t
+
+    def on_finish(self, req_id: int, escalated: bool = False) -> None:
+        tl = self.timelines[req_id]
+        tl.finish_t = self._end = self.clock()
+        tl.escalated = escalated
+
+    # ---- per-step gauges ---------------------------------------------------
+    def on_step(self, occupied_slots: int, queue_depth: int) -> None:
+        self.decode_steps += 1
+        self.occupancy_samples.append(occupied_slots)
+        self.queue_depth_samples.append(queue_depth)
+
+    # ---- rollup ------------------------------------------------------------
+    def summary(self) -> ServingSummary:
+        tls = list(self.timelines.values())
+        done = [t for t in tls if t.finish_t is not None]
+        lat = [t.latency for t in done]
+        ttft = [t.ttft for t in done if t.ttft is not None]
+        qw = [t.queue_wait for t in done if t.queue_wait is not None]
+        total_tokens = sum(t.tokens_out for t in tls)
+        wall = (self._end - self._start) \
+            if self._start is not None and self._end is not None else 0.0
+        occ = (float(np.mean(self.occupancy_samples)) / self.max_slots
+               if self.occupancy_samples else 0.0)
+        return ServingSummary(
+            requests=len(tls),
+            completed=len(done),
+            escalated=sum(t.escalated for t in done),
+            total_tokens=total_tokens,
+            wall_s=wall,
+            tokens_per_s=total_tokens / wall if wall > 0 else 0.0,
+            latency_p50_s=_pct(lat, 50),
+            latency_p99_s=_pct(lat, 99),
+            ttft_p50_s=_pct(ttft, 50),
+            queue_wait_p50_s=_pct(qw, 50),
+            mean_slot_occupancy=occ,
+            peak_queue_depth=max(self.queue_depth_samples, default=0),
+            decode_steps=self.decode_steps,
+        )

@@ -1,0 +1,436 @@
+"""Continuous-batching Bayesian LM server — the paper's uncertainty pathway
+as a *service*, not a function call.
+
+The one-shot engine (serving/engine.py) evaluates a fixed request batch to
+completion; real traffic arrives as a stream. This module adds the request
+layer that lets the batch-level mask schedule (paper Fig. 5) amortize across
+that stream:
+
+* **admission queue** — ``submit()`` enqueues a :class:`Request` under a
+  priority heap with ``max_queue`` backpressure (:class:`QueueFullError`);
+* **slot pool** — one KV/state cache of ``n_masks x max_slots`` batch rows,
+  laid out by :class:`repro.core.scheduler.SlotSchedule` (mask-major: a
+  request owns the ``n_masks`` rows of one slot). Finished requests free
+  their slot group; waiting requests are prefilled into free slots while
+  in-flight requests keep decoding — continuous batching;
+* **jitted fixed-shape steps** — :func:`step_fns` builds ``prefill``/
+  ``decode`` closures padded to the pool shape with donated caches, so the
+  hot decode loop traces exactly once (asserted in
+  tests/test_serving_server.py);
+* **first-class uncertainty** — every decode step returns the per-request
+  relative uncertainty; consecutive flagged tokens drive per-request
+  escalation state, and the policy can early-terminate (``"terminate"``) or
+  preempt + down-prioritize (``"deprioritize"``) flagged requests — the
+  paper's §VI-B clinical escalation pathway applied to scheduling.
+
+Prompt lengths may vary: each admission prefills at the request's true
+length, so the prefill function retraces once per *distinct* prompt length
+(bucket prompts upstream if that matters); the decode step shape never
+changes. Decode positions are per-row — the continuous-batching form of
+``transformer.decode_step``.
+
+Pool rows are computed batch-independently, so resident requests cannot
+perturb each other — with one caveat: MoE blocks route all rows through
+shared expert capacity, so per-request results are batch-composition-
+independent only when capacity is dropless (``capacity_factor >=
+n_experts / top_k``, as in the smoke configs); capacity-dropping MoE
+serving would need per-request routing isolation first.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import heapq
+import itertools
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import compat
+from repro.core import scheduler as scheduler_lib, uncertainty as unc_lib
+from repro.models import transformer
+from repro.models.model import Model
+from repro.serving.metrics import MetricsCollector, ServingSummary
+
+Params = dict[str, Any]
+
+__all__ = ["mesh_scope", "QueueFullError", "Request", "RequestState", "ServerConfig",
+           "BayesianLMServer", "StepFns", "step_fns"]
+
+
+def mesh_scope(mesh):
+    """Scope serving math to a device mesh via the portability layer
+    (no-op when single-device)."""
+    return compat.use_mesh(mesh) if mesh is not None \
+        else contextlib.nullcontext()
+
+
+def _donate_argnums(*argnums: int) -> tuple[int, ...]:
+    """Buffer-donation argnums for jit — () on CPU, which has no donation
+    support and warns on every call."""
+    return argnums if jax.default_backend() != "cpu" else ()
+
+
+# ---------------------------------------------------------------------------
+# jitted step functions (shared with the legacy engine API)
+# ---------------------------------------------------------------------------
+
+
+def posterior(logits: jax.Array, n: int) -> tuple[jax.Array, jax.Array]:
+    """Mask-sample posterior of one step: logits [n*b, V] (mask-major rows)
+    -> (mean log-probs [b, V], relative uncertainty of the argmax token [b]).
+
+    n=1 degenerates to plain log-probs with zero uncertainty."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    mean, std = unc_lib.predictive_moments(
+        logp.reshape(n, -1, logp.shape[-1]))
+    tok = jnp.argmax(mean, -1)
+    std_t = jnp.take_along_axis(std, tok[:, None], -1)[:, 0]
+    mean_t = jnp.take_along_axis(mean, tok[:, None], -1)[:, 0]
+    rel = std_t / jnp.maximum(jnp.abs(mean_t), unc_lib.REL_UNC_EPS)
+    return mean, rel
+
+
+@dataclasses.dataclass(frozen=True)
+class StepFns:
+    """Jitted serving steps. ``prefill(params, tokens [n*b, P], max_seq=M)``
+    and ``decode(params, caches, tokens [n*b, 1], pos)`` both return
+    ``(mean_logp [b, V], rel_unc [b], caches)``; ``pos`` is scalar or
+    per-row [n*b]. ``trace_counts`` increments at *trace* time — the
+    retrace-count observable the tests pin down."""
+    n_samples: int
+    prefill: Callable
+    decode: Callable
+    trace_counts: dict[str, int]
+
+
+@functools.lru_cache(maxsize=None)
+def step_fns(model: Model, expand_masks: bool = True) -> StepFns:
+    """Build (and cache per model config) the jitted serving steps.
+
+    expand_masks=True is the Bayesian serving form: rows are the mask
+    expansion (mask-major groups, row j uses mask ``j // b``). With
+    expand_masks=False (or a non-Bayesian config) rows are plain requests
+    and the posterior is the single-sample degenerate case — the legacy
+    ``generate`` path."""
+    cfg = model.cfg
+    bayes = cfg.bayesian and expand_masks
+    n = cfg.mask_samples if bayes else 1
+    counts = {"prefill": 0, "decode": 0}
+    # donating the decode caches keeps the pool memory flat
+    donate = _donate_argnums(1)
+
+    def _mask_ids(rows: int):
+        # Non-expanded rows keep the transformer's default (training
+        # batch-group) assignment.
+        return jnp.repeat(jnp.arange(n), rows // n) if bayes else None
+
+    def prefill_impl(params, tokens, max_seq):
+        counts["prefill"] += 1
+        logits, caches = transformer.prefill(
+            cfg, params, {"tokens": tokens}, max_seq=max_seq,
+            mask_ids=_mask_ids(tokens.shape[0]))
+        mean, rel = posterior(logits, n)
+        return mean, rel, caches
+
+    def decode_impl(params, caches, tokens, pos):
+        counts["decode"] += 1
+        logits, caches = transformer.decode_step(
+            cfg, params, caches, tokens, pos,
+            mask_ids=_mask_ids(tokens.shape[0]))
+        mean, rel = posterior(logits, n)
+        return mean, rel, caches
+
+    return StepFns(
+        n_samples=n,
+        prefill=jax.jit(prefill_impl, static_argnames=("max_seq",)),
+        decode=jax.jit(decode_impl, donate_argnums=donate),
+        trace_counts=counts)
+
+
+# ---------------------------------------------------------------------------
+# requests
+# ---------------------------------------------------------------------------
+
+
+class QueueFullError(RuntimeError):
+    """Admission queue at ``max_queue`` — backpressure; caller retries or
+    sheds load."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request. ``priority``: lower value = served first."""
+    req_id: int
+    tokens: tuple[int, ...]
+    max_new_tokens: int
+    priority: int = 0
+
+
+@dataclasses.dataclass
+class RequestState:
+    """Mutable serving state + final result of one request.
+
+    status: queued -> running -> done (or "escalated" when the uncertainty
+    policy terminated it early; "deprioritize" preemption bounces it back
+    to queued)."""
+    request: Request
+    status: str = "queued"
+    slot: int | None = None
+    effective_priority: int = 0
+    generated: list[int] = dataclasses.field(default_factory=list)
+    uncertainty: list[float] = dataclasses.field(default_factory=list)
+    flags: list[bool] = dataclasses.field(default_factory=list)
+    flag_streak: int = 0
+    escalated: bool = False
+    preempts: int = 0
+    pending: int | None = None    # next token to feed through decode
+    pending_unc: float = 0.0      # rel-unc of pending (from the step that
+                                  # chose it; recorded when it is emitted)
+
+    @property
+    def next_pos(self) -> int:
+        """Decode position of the pending token: prompt + emitted so far
+        (invariant across preemption — re-prefill re-encodes exactly the
+        first ``next_pos`` positions)."""
+        return len(self.request.tokens) + len(self.generated)
+
+
+# ---------------------------------------------------------------------------
+# the server
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    max_slots: int = 4
+    max_queue: int = 64
+    max_prompt_len: int = 32
+    max_new_tokens: int = 16          # per-request cap; requests may ask less
+    uncertainty_threshold: float = 0.5
+    escalation_patience: int = 2      # consecutive flagged tokens to escalate
+    escalation_policy: str = "flag"   # flag | terminate | deprioritize
+    deprioritize_penalty: int = 10    # priority added on escalation preempt
+
+    def __post_init__(self) -> None:
+        if self.escalation_policy not in ("flag", "terminate",
+                                          "deprioritize"):
+            raise ValueError(
+                f"unknown escalation policy {self.escalation_policy!r}")
+
+    @property
+    def max_seq(self) -> int:
+        return self.max_prompt_len + self.max_new_tokens
+
+
+class BayesianLMServer:
+    """Continuous-batching server over one Bayesian model.
+
+        server = BayesianLMServer(model, params, ServerConfig(max_slots=4))
+        rid = server.submit(prompt_tokens, max_new_tokens=12)
+        summary = server.run()            # drain queue + slots
+        state = server.result(rid)        # tokens, per-token uncertainty
+
+    ``step()`` is one engine iteration — admit waiting requests into free
+    slots (prefill + scatter into the pool), then one jitted decode over the
+    whole pool — so a driver can also interleave ``submit``/``step`` to
+    replay a live arrival trace (benchmarks/bench_serving.py).
+    """
+
+    def __init__(self, model: Model, params: Params,
+                 cfg: ServerConfig = ServerConfig(), *, mesh=None,
+                 clock: Callable[[], float] = time.perf_counter) -> None:
+        if not model.cfg.bayesian:
+            raise ValueError("BayesianLMServer requires mask_samples > 0")
+        self.model, self.params, self.cfg, self.mesh = model, params, cfg, \
+            mesh
+        self.schedule = scheduler_lib.SlotSchedule(model.cfg.mask_samples,
+                                                   cfg.max_slots)
+        self.steps = step_fns(model)
+        # donate the pool on scatter (admission overwrites rows in place);
+        # CPU has no donation support and warns, so only donate off-CPU
+        self._scatter = jax.jit(transformer.cache_scatter_rows,
+                                donate_argnums=_donate_argnums(0))
+        self._reset = jax.jit(transformer.cache_reset_rows,
+                              donate_argnums=_donate_argnums(0))
+        self._caches = transformer.init_cache(model.cfg, self.schedule.rows,
+                                              cfg.max_seq)
+        self._slots: list[int | None] = [None] * cfg.max_slots
+        self._queue: list[tuple[int, int, int]] = []   # (prio, seq, req_id)
+        self._seq = itertools.count()
+        self._ids = itertools.count()
+        self.states: dict[int, RequestState] = {}
+        self.metrics = MetricsCollector(cfg.max_slots, clock)
+
+    # ---- admission ---------------------------------------------------------
+    def submit(self, tokens, *, max_new_tokens: int | None = None,
+               priority: int = 0) -> int:
+        """Enqueue ONE prompt (a 1-D token sequence — submit a batch as
+        separate requests); returns the request id. Raises QueueFullError
+        when the admission queue is at max_queue (backpressure)."""
+        arr = np.asarray(tokens)
+        if arr.ndim > 1:
+            raise ValueError(f"submit takes one prompt, got shape "
+                             f"{arr.shape}; submit batch rows separately")
+        toks = tuple(int(t) for t in arr.reshape(-1))
+        if not 1 <= len(toks) <= self.cfg.max_prompt_len:
+            raise ValueError(f"prompt length {len(toks)} outside "
+                             f"[1, {self.cfg.max_prompt_len}]")
+        if len(self._queue) >= self.cfg.max_queue:
+            raise QueueFullError(
+                f"admission queue full ({self.cfg.max_queue})")
+        mnt = self.cfg.max_new_tokens if max_new_tokens is None \
+            else max_new_tokens
+        if not 1 <= mnt <= self.cfg.max_new_tokens:
+            raise ValueError(f"max_new_tokens {mnt} outside "
+                             f"[1, {self.cfg.max_new_tokens}]")
+        rid = next(self._ids)
+        st = RequestState(Request(rid, toks, mnt, priority),
+                          effective_priority=priority)
+        self.states[rid] = st
+        heapq.heappush(self._queue, (priority, next(self._seq), rid))
+        self.metrics.on_enqueue(rid)
+        return rid
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    @property
+    def occupied_slots(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    def result(self, req_id: int) -> RequestState:
+        return self.states[req_id]
+
+    def pop_result(self, req_id: int) -> RequestState:
+        """Return and evict a finished request's state — long-running
+        servers call this per completion to keep memory bounded (``result``
+        keeps states resident forever). The metrics timeline (a few floats)
+        stays so ``summary()`` still covers the whole run; rotate the
+        collector between runs if even that matters."""
+        st = self.states[req_id]
+        if st.status not in ("done", "escalated"):
+            raise ValueError(f"request {req_id} is still {st.status}")
+        del self.states[req_id]
+        return st
+
+    # ---- slot lifecycle ----------------------------------------------------
+    def _admit(self, req_id: int, slot: int) -> None:
+        """Prefill one request and scatter its cache rows into the slot
+        group — in-flight slots are untouched and keep decoding."""
+        st = self.states[req_id]
+        ctx = list(st.request.tokens) + st.generated   # re-entry after preempt
+        xt = jnp.tile(jnp.asarray(ctx, jnp.int32)[None],
+                      (self.schedule.n_masks, 1))
+        with mesh_scope(self.mesh):
+            mean, rel, fresh = self.steps.prefill(self.params, xt,
+                                                  max_seq=self.cfg.max_seq)
+            self._caches = self._scatter(self._caches, fresh,
+                                         self.schedule.rows_for_slot(slot))
+            st.pending = int(jnp.argmax(mean[0]))
+            st.pending_unc = float(rel[0])
+        st.status, st.slot = "running", slot
+        self._slots[slot] = req_id
+        if st.preempts == 0:
+            self.metrics.on_admit(req_id)
+            self.metrics.on_first_token(req_id)   # computed by the prefill
+
+    def _release_slot(self, slot: int) -> None:
+        """Free a slot group: clear host state and reset its cache rows
+        (K/V zero, kpos -1) so unoccupied groups stay observably empty."""
+        self._slots[slot] = None
+        mask = np.zeros(self.schedule.rows, bool)
+        mask[np.asarray(self.schedule.rows_for_slot(slot))] = True
+        self._caches = self._reset(self._caches, jnp.asarray(mask))
+
+    def _finish(self, st: RequestState, *, terminated: bool) -> None:
+        st.status = "escalated" if terminated else "done"
+        self._release_slot(st.slot)
+        st.slot, st.pending = None, None
+        self.metrics.on_finish(st.request.req_id, escalated=st.escalated)
+
+    def _preempt(self, st: RequestState) -> None:
+        """Deprioritize policy: bounce an escalated request back to the queue
+        (its slot goes to calmer traffic); it resumes later by re-prefilling
+        prompt + generated-so-far at a worse priority."""
+        self._release_slot(st.slot)
+        st.slot, st.status = None, "queued"
+        st.preempts += 1
+        st.effective_priority += self.cfg.deprioritize_penalty
+        heapq.heappush(self._queue, (st.effective_priority, next(self._seq),
+                                     st.request.req_id))
+
+    # ---- the engine iteration ----------------------------------------------
+    def step(self) -> bool:
+        """Admit waiting requests into free slots, then run one jitted decode
+        step across the pool. Returns False once fully idle."""
+        while self._queue and None in self._slots:
+            _, _, rid = heapq.heappop(self._queue)
+            self._admit(rid, self._slots.index(None))
+        occupied = [(slot, rid) for slot, rid in enumerate(self._slots)
+                    if rid is not None]
+        if not occupied:
+            return False
+
+        # Inactive slots decode at pos -1: their (garbage) K/V write lands on
+        # a kpos=-1 slot, so unoccupied rows stay observably empty.
+        tok = np.zeros(self.cfg.max_slots, np.int32)
+        pos = np.full(self.cfg.max_slots, -1, np.int32)
+        for slot, rid in occupied:
+            st = self.states[rid]
+            tok[slot] = st.pending
+            pos[slot] = st.next_pos
+        rows_tok = self.schedule.row_values(jnp.asarray(tok))[:, None]
+        rows_pos = self.schedule.row_values(jnp.asarray(pos))
+        with mesh_scope(self.mesh):
+            mean, rel, self._caches = self.steps.decode(
+                self.params, self._caches, rows_tok, rows_pos)
+            nxt = np.asarray(jnp.argmax(mean, -1))
+        rel = np.asarray(rel)
+        self.metrics.on_step(len(occupied), len(self._queue))
+        for slot, rid in occupied:
+            self._absorb(self.states[rid], int(nxt[slot]), float(rel[slot]))
+        return True
+
+    def _absorb(self, st: RequestState, next_tok: int, rel: float) -> None:
+        """Fold one decode result into request state: the pending token is
+        now emitted with the uncertainty of the step that *chose* it; this
+        step's ``rel`` describes ``next_tok`` and travels with it. The
+        escalation policy therefore acts on the emitted token's own
+        uncertainty."""
+        cfg = self.cfg
+        st.generated.append(st.pending)
+        st.uncertainty.append(st.pending_unc)
+        flagged = st.pending_unc > cfg.uncertainty_threshold
+        st.flags.append(flagged)
+        st.flag_streak = st.flag_streak + 1 if flagged else 0
+        st.pending = next_tok
+        st.pending_unc = rel
+        self.metrics.on_token(st.request.req_id)
+        newly = not st.escalated and \
+            st.flag_streak >= cfg.escalation_patience
+        if newly:
+            st.escalated = True
+        if st.escalated and cfg.escalation_policy == "terminate":
+            self._finish(st, terminated=True)
+        elif len(st.generated) >= st.request.max_new_tokens:
+            self._finish(st, terminated=False)
+        elif newly and cfg.escalation_policy == "deprioritize" and \
+                self._queue:
+            self._preempt(st)
+
+    def run(self, max_steps: int | None = None) -> ServingSummary:
+        """Drive step() until queue and slots drain (or max_steps)."""
+        steps = 0
+        while self._queue or self.occupied_slots:
+            if max_steps is not None and steps >= max_steps:
+                break
+            self.step()
+            steps += 1
+        return self.metrics.summary()

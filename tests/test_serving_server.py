@@ -1,0 +1,279 @@
+"""Continuous-batching server: slots, queue, retraces, and equivalence
+with the one-shot engine."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core.scheduler import SlotSchedule
+from repro.models import build_model, transformer
+from repro.serving import (BayesianLMServer, QueueFullError, ServeConfig,
+                           ServerConfig, serve_uncertain, step_fns)
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = registry.smoke_config("qwen2-1.5b", n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, n, length=6, seed=1):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(seed),
+                                         (n, length), 0, cfg.vocab_size))
+
+
+def _server(model, params, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_prompt_len", 8)
+    kw.setdefault("max_new_tokens", 4)
+    return BayesianLMServer(model, params, ServerConfig(**kw))
+
+
+# ---------------------------------------------------------------------------
+# slots
+# ---------------------------------------------------------------------------
+
+
+def test_slot_reuse_after_completion(small):
+    """4 requests through 2 slots: all complete, and the pool never holds
+    more than max_slots concurrently (freed slots are re-admitted into)."""
+    cfg, model, params = small
+    srv = _server(model, params)
+    prompts = _prompts(cfg, 4)
+    rids = [srv.submit(p) for p in prompts]
+    summary = srv.run()
+    assert summary.completed == 4
+    for r in rids:
+        st = srv.result(r)
+        assert st.status == "done"
+        assert len(st.generated) == 4 and len(st.uncertainty) == 4
+    assert max(srv.metrics.occupancy_samples) <= 2
+    # both slot groups were used, and reused: 4 requests > 2 slots
+    assert summary.peak_queue_depth >= 1
+    assert srv.occupied_slots == 0 and srv.queue_depth == 0
+    # every slot was released: the whole pool is observably empty again
+    assert (np.asarray(srv._caches[0]["b0"]["kpos"]) == -1).all()
+    # eviction API for long-running servers
+    st0 = srv.pop_result(rids[0])
+    assert st0.status == "done" and rids[0] not in srv.states
+
+
+def test_queue_backpressure(small):
+    cfg, model, params = small
+    srv = _server(model, params, max_queue=3)
+    prompts = _prompts(cfg, 4)
+    for p in prompts[:3]:
+        srv.submit(p)
+    with pytest.raises(QueueFullError):
+        srv.submit(prompts[3])
+    # draining the queue frees admission capacity again
+    srv.run()
+    rid = srv.submit(prompts[3])
+    assert srv.queue_depth == 1
+    with pytest.raises(ValueError):
+        srv.pop_result(rid)                 # still queued, not evictable
+
+
+def test_prompt_length_validation(small):
+    cfg, model, params = small
+    srv = _server(model, params, max_prompt_len=4)
+    with pytest.raises(ValueError):
+        srv.submit(np.zeros(5, np.int32))
+    with pytest.raises(ValueError):
+        srv.submit(np.zeros(0, np.int32))
+    with pytest.raises(ValueError):
+        srv.submit(np.zeros(3, np.int32), max_new_tokens=0)
+    with pytest.raises(ValueError):
+        srv.submit(np.zeros(3, np.int32), max_new_tokens=99)
+    with pytest.raises(ValueError):
+        srv.submit(np.zeros((2, 2), np.int32))   # one prompt per submit
+
+
+# ---------------------------------------------------------------------------
+# mask-group / slot invariants
+# ---------------------------------------------------------------------------
+
+
+def test_slot_schedule_layout():
+    sch = SlotSchedule(n_masks=4, max_slots=3)
+    assert sch.rows == 12
+    # mask-major contiguous groups — the serve_uncertain layout
+    np.testing.assert_array_equal(np.asarray(sch.mask_ids()),
+                                  np.repeat(np.arange(4), 3))
+    np.testing.assert_array_equal(np.asarray(sch.rows_for_slot(1)),
+                                  [1, 4, 7, 10])
+    np.testing.assert_array_equal(np.asarray(sch.row_values(np.array(
+        [5, 6, 7]))), [5, 6, 7] * 4)
+    # batch-level traffic over the pool: weights touched once per mask
+    tm = sch.decode_traffic(8, 16, 8)
+    assert tm.weight_loads == 4
+    with pytest.raises(ValueError):
+        SlotSchedule(0, 3)
+
+
+def test_mask_group_cache_invariants(small):
+    """After admission, a request's slot group holds its prompt positions in
+    every mask row; untouched slots stay empty (kpos == -1)."""
+    cfg, model, params = small
+    srv = _server(model, params, max_slots=3)
+    p = _prompts(cfg, 1, length=5)[0]
+    srv.submit(p)
+    srv.step()                                   # admit + first decode
+    sch = srv.schedule
+    rows = np.asarray(sch.rows_for_slot(0))
+    kpos = np.asarray(srv._caches[0]["b0"]["kpos"][0])   # [rows, max_seq]
+    # all mask rows of slot 0 agree, and hold prompt+1 decoded positions
+    for r in rows[1:]:
+        np.testing.assert_array_equal(kpos[rows[0]], kpos[r])
+    assert set(kpos[rows[0]][kpos[rows[0]] >= 0].tolist()) == set(range(6))
+    # never-admitted slot groups are still empty
+    for s in (1, 2):
+        for r in np.asarray(sch.rows_for_slot(s)):
+            assert (kpos[r] == -1).all()
+
+
+def test_cache_row_helpers(small):
+    cfg, model, params = small
+    pool = transformer.init_cache(cfg, 4, 8)
+    fresh = jax.tree.map(
+        lambda s: jnp.full(s.shape, 7, s.dtype),
+        transformer.cache_specs(cfg, 2, 8))
+    rows = jnp.asarray([1, 3])
+    merged = transformer.cache_scatter_rows(pool, fresh, rows)
+    got = transformer.cache_gather_rows(merged, rows)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(fresh)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # untouched row keeps its init value (kpos -1, k/v zero)
+    kpos0 = np.asarray(merged[0]["b0"]["kpos"][0, 0])
+    assert (kpos0 == -1).all()
+    # reset clears exactly the masked rows
+    reset = transformer.cache_reset_rows(merged, jnp.asarray(
+        [False, True, False, False]))
+    assert (np.asarray(reset[0]["b0"]["kpos"][0, 1]) == -1).all()
+    assert (np.asarray(reset[0]["b0"]["k"][0, 1]) == 0).all()
+    np.testing.assert_array_equal(np.asarray(reset[0]["b0"]["kpos"][0, 3]),
+                                  np.asarray(merged[0]["b0"]["kpos"][0, 3]))
+
+
+# ---------------------------------------------------------------------------
+# retraces
+# ---------------------------------------------------------------------------
+
+
+def test_jitted_steps_do_not_retrace(small):
+    """The decode hot loop traces at most once for the pool shape; prefill
+    at most once per distinct prompt length — and never again for repeat
+    traffic (the steps are shared through one lru-cached StepFns per model,
+    so earlier tests may have warmed the jit cache already)."""
+    cfg, model, params = small
+    srv = _server(model, params)
+    fns = srv.steps
+    d0, p0 = fns.trace_counts["decode"], fns.trace_counts["prefill"]
+    srv.submit(_prompts(cfg, 1)[0])
+    srv.run()                                      # first request may trace
+    assert fns.trace_counts["prefill"] - p0 <= 1
+    assert fns.trace_counts["decode"] - d0 <= 1
+    d1, p1 = fns.trace_counts["decode"], fns.trace_counts["prefill"]
+    for p in _prompts(cfg, 5):                     # same shapes: zero traces
+        srv.submit(p)
+    srv.run()
+    # a second server with identical shapes also hits the same jit cache
+    srv2 = _server(model, params)
+    srv2.submit(_prompts(cfg, 1)[0])
+    srv2.run()
+    assert fns.trace_counts["prefill"] == p1
+    assert fns.trace_counts["decode"] == d1
+
+
+# ---------------------------------------------------------------------------
+# equivalence with the one-shot engine
+# ---------------------------------------------------------------------------
+
+
+def test_server_matches_one_shot(small):
+    """Same request batch through the server and serve_uncertain: identical
+    tokens, identical per-token uncertainties (fp tolerance)."""
+    cfg, model, params = small
+    prompts = _prompts(cfg, 3, length=7, seed=3)
+    gen, unc, _ = serve_uncertain(model, params, jnp.asarray(prompts),
+                                  ServeConfig(max_new_tokens=5))
+    srv = _server(model, params, max_slots=3, max_new_tokens=5)
+    rids = [srv.submit(p) for p in prompts]
+    srv.run()
+    for i, r in enumerate(rids):
+        st = srv.result(r)
+        np.testing.assert_array_equal(np.asarray(gen[i, 7:]), st.generated)
+        np.testing.assert_allclose(np.asarray(unc[i]), st.uncertainty,
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_generate_via_steps_matches_shapes(small):
+    from repro.serving import generate
+    cfg, model, params = small
+    toks = jnp.asarray(_prompts(cfg, 2, length=6, seed=4))
+    out = generate(model, params, toks, ServeConfig(max_new_tokens=3))
+    assert out.shape == (2, 9)
+    np.testing.assert_array_equal(np.asarray(out[:, :6]), np.asarray(toks))
+
+
+# ---------------------------------------------------------------------------
+# uncertainty-aware policies
+# ---------------------------------------------------------------------------
+
+
+def test_escalation_terminate_policy(small):
+    """threshold 0 flags every token -> patience is hit immediately and the
+    terminate policy stops the request early."""
+    cfg, model, params = small
+    srv = BayesianLMServer(model, params, ServerConfig(
+        max_slots=2, max_prompt_len=8, max_new_tokens=6,
+        uncertainty_threshold=0.0, escalation_patience=2,
+        escalation_policy="terminate"))
+    rid = srv.submit(_prompts(cfg, 1)[0])
+    summary = srv.run()
+    st = srv.result(rid)
+    assert st.status == "escalated" and st.escalated
+    assert len(st.generated) == 2          # stopped at patience, not at 6
+    assert summary.escalated == 1
+
+
+def test_escalation_deprioritize_policy(small):
+    """An escalating request yields its slot to queued traffic and still
+    finishes later at a worse priority."""
+    cfg, model, params = small
+    srv = BayesianLMServer(model, params, ServerConfig(
+        max_slots=1, max_queue=8, max_prompt_len=8, max_new_tokens=4,
+        uncertainty_threshold=0.0, escalation_patience=1,
+        escalation_policy="deprioritize", deprioritize_penalty=5))
+    prompts = _prompts(cfg, 2)
+    r0 = srv.submit(prompts[0])
+    r1 = srv.submit(prompts[1])
+    summary = srv.run()
+    s0, s1 = srv.result(r0), srv.result(r1)
+    assert summary.completed == 2
+    assert s0.preempts >= 1 and s0.effective_priority >= 5
+    assert len(s0.generated) == 4 and len(s1.generated) == 4
+    # preemption must not corrupt the continuation: re-served output equals
+    # the uninterrupted one-shot result for the same prompt
+    gen, _, _ = serve_uncertain(model, params, jnp.asarray(prompts[:1]),
+                                ServeConfig(max_new_tokens=4))
+    np.testing.assert_array_equal(np.asarray(gen[0, 6:]), s0.generated)
+
+
+def test_priority_admission_order(small):
+    """With one slot busy, the lower priority value is admitted first."""
+    cfg, model, params = small
+    srv = _server(model, params, max_slots=1)
+    prompts = _prompts(cfg, 3)
+    r0 = srv.submit(prompts[0])               # occupies the slot
+    srv.step()
+    r_lo = srv.submit(prompts[1], priority=5)
+    r_hi = srv.submit(prompts[2], priority=-5)
+    srv.run()
+    tl = srv.metrics.timelines
+    assert tl[r_hi].admit_t < tl[r_lo].admit_t
+    assert all(srv.result(r).status == "done" for r in (r0, r_lo, r_hi))
