@@ -20,7 +20,7 @@ def main() -> None:
                     help="tiny serving trace (CI-sized)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_algorithm, bench_kernels,
+    from benchmarks import (bench_algorithm, bench_ivim_packed, bench_kernels,
                             bench_latency_model, bench_roofline,
                             bench_schedule, bench_serving)
 
@@ -55,6 +55,16 @@ def main() -> None:
     csv.append(("tableI_scheme_speedup",
                 base["latency_ms"] / opt["latency_ms"],
                 "packed+batch-level vs conventional, modeled"))
+
+    print()
+    print("=" * 72)
+    print("bench_ivim_packed — PackedPlan IVIM volume serving vs unpacked")
+    print("=" * 72)
+    ivp = bench_ivim_packed.run(smoke=args.smoke)
+    csv.append(("ivim_packed_plan_speedup", ivp["speedup"],
+                "plan-compiled packed serving vs apply_all_samples, wall"))
+    csv.append(("ivim_packed_traffic_reduction", ivp["traffic_reduction"],
+                "plan traffic: sampling-level / batch-level weight bytes"))
 
     print()
     print("=" * 72)

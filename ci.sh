@@ -23,6 +23,16 @@ fi
 # summary shows every regression.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q
 
+# Second tier-1 leg: force the pure-XLA reference kernel tier, so the
+# fallback path deployments without Pallas rely on is exercised in CI — not
+# just whatever the probe picked on this machine.
+REPRO_KERNEL_BACKEND=xla \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q
+
 # Serving smoke: replay a tiny Poisson trace through the continuous-batching
 # server and the looped one-shot path; exits nonzero if their tokens diverge.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_serving --smoke
+
+# Packed-plan smoke: IVIM volume through the compiled PackedPlan path vs the
+# unpacked baseline (equivalence is tested; this guards the bench wiring).
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_ivim_packed --smoke

@@ -37,12 +37,13 @@ def main() -> None:
               f"+/- {np.asarray(std[0, i]):.5f} "
               f"(truth {np.asarray(ds['params'][name][0]):.5f})")
 
-    # Phase 3: mask-zero skipping + batch-level serving
-    packed = ivim_model.pack_for_serving(cfg, params, state)
-    served = ivim_model.packed_apply(cfg, packed, x)
+    # Phase 3: compile to a PackedPlan (mask-zero skipping + batch-level
+    # schedule, dispatched through the masked_ffn kernel stack)
+    plan = ivim_model.pack_for_serving(cfg, params, state)
+    served = ivim_model.packed_apply(plan, x)
     ref = ivim_model.apply_all_samples(cfg, params, state, x)
     err = float(np.abs(np.asarray(served) - np.asarray(ref)).max())
-    keep = packed["w1p"].shape[-1]
+    keep = plan.pairs[0].keep
     print(f"packed serving: hidden {cfg.width} -> {keep} units/sample, "
           f"max|err| vs training form = {err:.2e}")
 

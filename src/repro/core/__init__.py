@@ -4,14 +4,15 @@ Public API:
   masks          — fixed Masksembles mask generation (offline, seeded)
   masksembles    — masked dense/FFN layers (training form)
   packing        — mask-zero skipping (packed dense serving weights)
+  plan           — PackedPlan IR: the one mask→kernel compilation pipeline
   scheduler      — sampling-level vs batch-level sample scheduling
   uncertainty    — predictive moments, relative uncertainty, requirements
   transform      — Phase 1→3 conversion flow (DNN → BayesNN → hardware plan)
   latency_model  — Eq.-2 TPU analogue + roofline terms
 """
 
-from repro.core import (latency_model, masks, masksembles, packing, scheduler,
-                        transform, uncertainty)
+from repro.core import (latency_model, masks, masksembles, packing, plan,
+                        scheduler, transform, uncertainty)
 
-__all__ = ["masks", "masksembles", "packing", "scheduler", "uncertainty",
-           "transform", "latency_model"]
+__all__ = ["masks", "masksembles", "packing", "plan", "scheduler",
+           "uncertainty", "transform", "latency_model"]

@@ -175,14 +175,15 @@ def _normalize_keep_counts(masks: np.ndarray, keep: int,
         ones = np.flatnonzero(masks[i])
         if len(ones) > keep:
             # Drop from positions other masks also cover, least-needed first.
+            need = len(ones) - keep
             cover = masks.sum(axis=0)
             order = ones[np.argsort(-cover[ones], kind="stable")]
-            drop = [p for p in order if cover[p] > 1][: len(ones) - keep]
+            drop = [p for p in order if cover[p] > 1][:need]
             # If coverage cannot be preserved, drop arbitrarily (rare).
-            while len(drop) < len(ones) - keep:
-                rest = [p for p in ones if p not in drop]
-                drop.append(rest[0])
-            masks[i, drop[: len(ones) - keep]] = False
+            if len(drop) < need:
+                dropped = set(drop)
+                drop.extend(p for p in ones if p not in dropped)
+            masks[i, drop[:need]] = False
         elif len(ones) < keep:
             zeros = np.flatnonzero(~masks[i])
             cover = masks.sum(axis=0)

@@ -20,7 +20,9 @@ zero contribute nothing through w2.
 
 All functions are pure and run at model-build time (host), so the packed
 weights are ordinary pytree leaves — the serving graph contains no masking at
-all.
+all. This module holds the shared gather primitives plus the jnp reference
+pack/apply forms the scheduler and property tests drive; the model-level
+compilers (IVIM, MaskedMlp, transformer FFN) live in :mod:`repro.core.plan`.
 """
 
 from __future__ import annotations
@@ -35,12 +37,12 @@ Params = dict[str, Any]
 
 __all__ = [
     "kept_indices",
+    "gather_units",
     "pack_out_dim",
     "pack_in_dim",
+    "pack_pair_dims",
     "pack_masked_ffn",
-    "pack_gated_ffn",
     "packed_ffn_apply",
-    "packed_gated_ffn_apply",
 ]
 
 
@@ -51,18 +53,38 @@ def kept_indices(masks: np.ndarray | jax.Array) -> np.ndarray:
     if not (counts == counts[0]).all():
         raise ValueError(f"non-uniform keep counts {counts}; packing requires "
                          "rectangular masks (masks.py normalizes to K)")
-    n, _ = masks.shape
-    return np.stack([np.flatnonzero(masks[i]) for i in range(n)], axis=0)
+    k = int(counts[0])
+    # stable argsort puts the kept (True) positions first, in ascending index
+    # order — the vectorized form of a per-row flatnonzero
+    return np.argsort(~masks, axis=1, kind="stable")[:, :k]
+
+
+def gather_units(w: jax.Array, idx: np.ndarray, axis: int) -> jax.Array:
+    """Per-mask gather along one axis in a single take (no per-mask loop):
+    w [..., H, ...] + idx [N, K] → [N, ..., K, ...] (K replaces H)."""
+    w = jnp.asarray(w)
+    ax = axis % w.ndim
+    out = jnp.take(w, jnp.asarray(idx), axis=ax)   # N, K inserted at ax
+    return jnp.moveaxis(out, ax, 0)
 
 
 def pack_out_dim(w: jax.Array, idx: np.ndarray) -> jax.Array:
     """w [..., H] + idx [N, K] → [N, ..., K] (gather kept output units)."""
-    return jnp.stack([jnp.take(w, idx[i], axis=-1) for i in range(idx.shape[0])])
+    return gather_units(w, idx, axis=-1)
 
 
 def pack_in_dim(w: jax.Array, idx: np.ndarray) -> jax.Array:
     """w [H, ...] + idx [N, K] → [N, K, ...] (gather kept input units)."""
-    return jnp.stack([jnp.take(w, idx[i], axis=0) for i in range(idx.shape[0])])
+    return gather_units(w, idx, axis=0)
+
+
+def pack_pair_dims(w: jax.Array, idx_in: np.ndarray,
+                   idx_out: np.ndarray) -> jax.Array:
+    """w [H_in, H_out] → [N, K_in, K_out]: paired per-mask gather of both
+    dims — the middle layer of a chain whose input *and* output units are
+    masked (mask n's kept inputs pair with mask n's kept outputs)."""
+    g = gather_units(w, idx_in, axis=0)            # [N, K_in, H_out]
+    return jnp.take_along_axis(g, jnp.asarray(idx_out)[:, None, :], axis=2)
 
 
 def pack_masked_ffn(w1: jax.Array, b1: jax.Array, w2: jax.Array,
@@ -75,19 +97,6 @@ def pack_masked_ffn(w1: jax.Array, b1: jax.Array, w2: jax.Array,
         "w2p": pack_in_dim(w2, idx),        # [N, K, D2]
         "b2": b2,                           # [D2] shared across samples
         "kept_idx": jnp.asarray(idx),       # bookkeeping / unpacking
-    }
-
-
-def pack_gated_ffn(w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array,
-                   masks: np.ndarray | jax.Array) -> Params:
-    """Pack a SwiGLU-style gated FFN (LM archs): mask covers the hidden dim of
-    both gate and up projections; silu(0)*0 == 0 keeps exactness."""
-    idx = kept_indices(masks)
-    return {
-        "wgp": pack_out_dim(w_gate, idx),   # [N, D, K]
-        "wup": pack_out_dim(w_up, idx),     # [N, D, K]
-        "wdp": pack_in_dim(w_down, idx),    # [N, K, D]
-        "kept_idx": jnp.asarray(idx),
     }
 
 
@@ -109,9 +118,3 @@ def packed_ffn_apply(packed: Params, x: jax.Array,
     return h @ packed["w2p"][sample] + packed["b2"]
 
 
-def packed_gated_ffn_apply(packed: Params, x: jax.Array) -> jax.Array:
-    """All-sample packed SwiGLU: x [..., D] → [N, ..., D]."""
-    g = jnp.einsum("...d,ndk->n...k", x, packed["wgp"])
-    u = jnp.einsum("...d,ndk->n...k", x, packed["wup"])
-    h = jax.nn.silu(g) * u
-    return jnp.einsum("n...k,nkd->n...d", h, packed["wdp"])

@@ -1,0 +1,544 @@
+"""PackedPlan — the single mask-compilation pipeline (paper Fig. 1, Phase 3).
+
+The paper's transformation design flow lowers *any* dropout-equipped network
+to a mask-based BayesNN served with its two hardware optimizations:
+mask-zero skipping (packed per-sample dense weights, §V-C) and operation
+reordering (the batch-level sample schedule, §V-D). This module is the one
+place that lowering happens. It owns
+
+  * BN folding (inference-mode batchnorm folded into the preceding dense),
+  * ``kept_indices`` gathering (mask → packed per-sample weight slices),
+  * the sample schedule (batch-level by default; ``SlotSchedule``-compatible
+    for the serving pool), and
+  * kernel dispatch: every :class:`PackedPair` runs through
+    ``kernels/masked_ffn`` (Pallas-TPU → Pallas-interpret → pure-XLA ref via
+    the ``compat.kernel_backend`` probe), so the IVIM sub-networks hit the
+    same kernel the transformer FFN does.
+
+IR shape: a :class:`PackedPlan` is an ordered list of ops over a running
+hidden state ``h`` (``[B, D]`` until the first packed op introduces the
+sample axis, ``[G·N, B, D]`` after it):
+
+  ========================  =================================================
+  op                        semantics
+  ========================  =================================================
+  :class:`SharedDense`      ``h @ w + b`` with weights shared across samples
+  :class:`PackedPair`       fused 2-layer FFN on per-mask gathered weights:
+                            ``act(h @ w1p[n] + b1p[n]) @ w2p[n] + b2`` — the
+                            masked_ffn kernel shape (act='relu' dispatches to
+                            the kernel; other activations and per-sample
+                            inputs take the sample-major einsum form)
+  :class:`Activation`       elementwise nonlinearity
+  :class:`OutputHead`       final (optionally per-mask in-gathered) dense +
+                            output activation
+  ========================  =================================================
+
+Stacked sub-networks (IVIM's 4 identical chains) ride the kernel's sample
+axis: ``groups=G`` flattens subnet × mask into ``G·N`` independent weight
+sets applied to one shared batch — exactly what the batch-level grid
+amortizes. The executor un-flattens at the end and applies the clinical
+range conversion C(.) when ``out_ranges`` is set.
+
+Compile entry points (one per model family):
+  * :func:`compile_ivim`        — uIVIM-NET (owns the BN folding)
+  * :func:`compile_mlp`         — any ``transform.MaskedMlp`` chain
+  * :func:`compile_masked_ffn`  — a bare masked relu-FFN (kernels entry)
+  * :func:`pack_ffn_leaves`     — transformer FFN serving leaves (wgp/wup/wdp)
+
+Exactness relies on the two invariants the rest of the repo property-tests:
+masks keep exactly K units (masks.py I2, so gathers are rectangular) and
+activations are zero-preserving (relu(z)·m == relu(z·m) for binary m).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import latency_model, packing
+from repro.core import scheduler as sched_lib
+
+Params = dict[str, Any]
+
+__all__ = [
+    "SharedDense", "PackedPair", "Activation", "OutputHead", "PackedPlan",
+    "fold_bn_dense", "fold_bn_ivim", "compile_ivim", "compile_mlp",
+    "compile_masked_ffn", "pack_ffn_leaves", "ffn_leaves_apply", "execute",
+]
+
+#: The one activation-name table for the mask pipeline and the model specs
+#: that compile through it (transform.MaskedMlp resolves against this too —
+#: a name that trains must also compile).
+ACTIVATIONS: dict[str, Callable[[jax.Array], jax.Array]] = {
+    "relu": jax.nn.relu, "gelu": jax.nn.gelu, "silu": jax.nn.silu,
+    "sigmoid": jax.nn.sigmoid, "tanh": jnp.tanh, "identity": lambda x: x,
+}
+
+
+def activation_fn(name: str) -> Callable[[jax.Array], jax.Array]:
+    """Resolve an activation name ('gelu_mlp' is the plain-MLP gelu)."""
+    return ACTIVATIONS["gelu" if name == "gelu_mlp" else name]
+
+
+# ---------------------------------------------------------------------------
+# ops (static metadata; weights live in plan.params[op.name])
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SharedDense:
+    """Sample-independent dense: params {w [D, D2], b [D2]?}."""
+    name: str
+    d_in: int
+    d_out: int
+    activation: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedPair:
+    """Fused 2-matrix packed FFN over per-mask gathered weights.
+
+    params: w1p [Ne, d_in, keep], b1p [Ne, keep], w2p [Ne, keep, d_out] and
+    either b2 [d_out] (shared) or b2p [Ne, d_out] (the pair's output units
+    are themselves mask-gathered). The gated transformer FFN keeps its own
+    leaf layout (:func:`pack_ffn_leaves` / :func:`ffn_leaves_apply`).
+
+    ``d_in``/``d_out`` are the *packed* operand widths; ``d_in_full``/
+    ``d_out_full``/``hidden`` record the unpacked widths so the latency and
+    traffic models can price the pre-optimization baseline without
+    re-deriving anything from the weights.
+    """
+    name: str
+    d_in: int
+    hidden: int
+    keep: int
+    d_out: int
+    d_in_full: int = 0
+    d_out_full: int = 0
+    activation: str = "relu"
+
+    def __post_init__(self) -> None:
+        if self.d_in_full == 0:
+            object.__setattr__(self, "d_in_full", self.d_in)
+        if self.d_out_full == 0:
+            object.__setattr__(self, "d_out_full", self.d_out)
+
+
+@dataclasses.dataclass(frozen=True)
+class Activation:
+    """Elementwise nonlinearity between packed ops (no params)."""
+    fn: str
+    name: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class OutputHead:
+    """Terminal dense + output activation. per_mask=True → params
+    {wp [Ne, d_in, d_out], bp [Ne, d_out] | b [d_out]} (input units are
+    mask-gathered); else {w [d_in, d_out], b [d_out]?}."""
+    name: str
+    d_in: int
+    d_out: int
+    d_in_full: int = 0
+    activation: str | None = None
+    per_mask: bool = True
+
+    def __post_init__(self) -> None:
+        if self.d_in_full == 0:
+            object.__setattr__(self, "d_in_full", self.d_in)
+
+
+Op = SharedDense | PackedPair | Activation | OutputHead
+
+
+# ---------------------------------------------------------------------------
+# the plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PackedPlan:
+    """Compiled serving program: ops + packed weights + sample schedule.
+
+    ``groups`` stacked sub-networks share the kernel sample axis (row order
+    group-major: row ``g * n_masks + n``); ``out_ranges`` is the optional
+    clinical conversion C(.) applied per output column.
+    """
+    ops: tuple[Op, ...]
+    params: Params
+    n_masks: int
+    groups: int = 1
+    schedule: sched_lib.Schedule = sched_lib.Schedule("batch")
+    out_ranges: tuple[tuple[float, float], ...] | None = None
+
+    @property
+    def sample_axis(self) -> int:
+        """Rows of the kernel's sample axis (groups × masks)."""
+        return self.groups * self.n_masks
+
+    @property
+    def pairs(self) -> tuple[PackedPair, ...]:
+        return tuple(op for op in self.ops if isinstance(op, PackedPair))
+
+    def slot_schedule(self, max_slots: int) -> sched_lib.SlotSchedule:
+        """The serving-pool row layout this plan's sample axis maps onto."""
+        return sched_lib.SlotSchedule(n_masks=self.n_masks,
+                                      max_slots=max_slots)
+
+    def traffic(self, batch: int, bytes_per_el: int = 2,
+                schedule: sched_lib.Schedule | None = None
+                ) -> sched_lib.TrafficModel:
+        """Summed HBM traffic of the plan's packed pairs under a schedule
+        (defaults to the plan's own) — the quantity the batch-level reorder
+        optimizes, fed straight from op metadata."""
+        schedule = schedule or self.schedule
+        n = self.sample_axis
+        w = a = f = loads = 0
+        for op in self.pairs:
+            tm = sched_lib.traffic_model(schedule, batch, n, op.d_in,
+                                         op.keep, op.d_out, bytes_per_el)
+            w += tm.weight_bytes
+            a += tm.act_bytes
+            f += tm.flops
+            loads += tm.weight_loads
+        return sched_lib.TrafficModel(weight_bytes=w, act_bytes=a, flops=f,
+                                      weight_loads=loads)
+
+    def modeled_latency(self, batch: int, *,
+                        spec: latency_model.TpuSpec = latency_model.V5E,
+                        packed: bool = True, batch_level: bool = True,
+                        bytes_per_el: int = 2) -> float:
+        """Eq.-2-analogue latency of one batch, summed over ops. With
+        ``packed=False, batch_level=False`` this prices the conventional
+        BayesNN baseline (full hidden widths, weights re-streamed per voxel
+        chunk) on the same op list."""
+        n = self.sample_axis
+        t = 0.0
+        for op in self.ops:
+            if isinstance(op, PackedPair):
+                t += latency_model.masked_ffn_latency(
+                    batch, n, op.d_in if packed else op.d_in_full, op.hidden,
+                    op.keep, op.d_out if packed else op.d_out_full,
+                    packed=packed, batch_level=batch_level, spec=spec,
+                    bytes_per_el=bytes_per_el)
+            elif isinstance(op, SharedDense):
+                t += latency_model.matmul_time(batch, op.d_in, op.d_out,
+                                               spec, bytes_per_el)
+            elif isinstance(op, OutputHead):
+                d_in = op.d_in if packed else op.d_in_full
+                per = latency_model.matmul_time(batch, d_in, op.d_out, spec,
+                                                bytes_per_el)
+                t += per * (n if op.per_mask else 1)
+        return t
+
+
+# ---------------------------------------------------------------------------
+# BN folding (owned here — the compiler's one folding implementation)
+# ---------------------------------------------------------------------------
+
+
+def fold_bn_dense(fc: Params, bn: Params, st: Params,
+                  eps: float = 1e-5) -> Params:
+    """Fold inference-mode batchnorm into the preceding dense — exact at
+    eval time: returns {w', b'} with w' = w·γ/√(σ²+ε)."""
+    inv = bn["gamma"] * jax.lax.rsqrt(st["var"] + eps)
+    return {"w": fc["w"] * inv[None, :],
+            "b": (fc["b"] - st["mean"]) * inv + bn["beta"]}
+
+
+def fold_bn_ivim(params: Params, state: Params) -> Params:
+    """IVIM-shaped folding: fc1/fc2 carry bn1/bn2, all leaves stacked [G, ...]
+    over sub-networks. Returns params with plain fc1/fc2 and no bn."""
+    out = {k: v for k, v in params.items() if k not in ("bn1", "bn2")}
+    fold = jax.vmap(fold_bn_dense)
+    out["fc1"] = fold(params["fc1"], params["bn1"], state["bn1"])
+    out["fc2"] = fold(params["fc2"], params["bn2"], state["bn2"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# compilers
+# ---------------------------------------------------------------------------
+
+
+def _host_masks(masks) -> np.ndarray:
+    return np.asarray(jax.device_get(masks)).astype(bool)
+
+
+def compile_masked_ffn(w1: jax.Array, b1: jax.Array, w2: jax.Array,
+                       b2: jax.Array, masks) -> PackedPlan:
+    """A bare masked relu-FFN (the masked_ffn kernel's own shape):
+    relu(x @ w1 + b1) · mask[n] @ w2 + b2 → one PackedPair."""
+    idx = packing.kept_indices(_host_masks(masks))
+    params = {"pair": {"w1p": packing.pack_out_dim(w1, idx),
+                       "b1p": packing.pack_out_dim(b1, idx),
+                       "w2p": packing.pack_in_dim(w2, idx),
+                       "b2": b2}}
+    op = PackedPair("pair", d_in=w1.shape[0], hidden=w1.shape[1],
+                    keep=idx.shape[1], d_out=w2.shape[1])
+    return PackedPlan(ops=(op,), params=params, n_masks=idx.shape[0])
+
+
+def compile_ivim(cfg, params: Params, state: Params) -> PackedPlan:
+    """uIVIM-NET → PackedPlan (cfg: repro.ivim.model.IvimConfig, duck-typed).
+
+    Folds BN, gathers the fc1→fc2→enc chain (mask1 on fc1's outputs, mask2
+    on fc2's), and flattens the 4 sub-networks onto the kernel sample axis:
+    w1p [4N, Nb, K1], w2p [4N, K1, K2], w3p [4N, K2, 1]. One shared voxel
+    batch streams through 4N independent weight sets — the batch-level
+    schedule, with sub-network parallelism for free (deviation §8.4).
+    """
+    if not cfg.bayesian:
+        raise ValueError("packing requires a Masksembles model")
+    p = fold_bn_ivim(params, state) if cfg.use_batchnorm else params
+    idx1 = packing.kept_indices(_host_masks(p["mask1"]))
+    idx2 = packing.kept_indices(_host_masks(p["mask2"]))
+    k1, k2 = idx1.shape[1], idx2.shape[1]
+    groups = p["fc1"]["w"].shape[0]
+    width = cfg.width
+
+    def flat(x: jax.Array) -> jax.Array:            # [G, N, ...] -> [G·N, ...]
+        return x.reshape((-1,) + x.shape[2:])
+
+    out1 = jax.vmap(lambda leaf: packing.pack_out_dim(leaf, idx1))
+    out2 = jax.vmap(lambda leaf: packing.pack_out_dim(leaf, idx2))
+    body = {"w1p": flat(out1(p["fc1"]["w"])),       # [G·N, Nb, K1]
+            "b1p": flat(out1(p["fc1"]["b"])),       # [G·N, K1]
+            "w2p": flat(jax.vmap(
+                lambda leaf: packing.pack_pair_dims(leaf, idx1, idx2))(
+                    p["fc2"]["w"])),                # [G·N, K1, K2]
+            "b2p": flat(out2(p["fc2"]["b"]))}       # [G·N, K2]
+    head = {"wp": flat(jax.vmap(
+                lambda leaf: packing.pack_in_dim(leaf, idx2))(
+                    p["enc"]["w"])),                # [G·N, K2, 1]
+            "bp": jnp.repeat(p["enc"]["b"], idx1.shape[0], axis=0)}
+    ops = (
+        PackedPair("body", d_in=width, hidden=width, keep=k1, d_out=k2,
+                   d_out_full=width, activation="relu"),
+        Activation("relu"),
+        OutputHead("head", d_in=k2, d_in_full=width, d_out=1,
+                   activation="sigmoid", per_mask=True),
+    )
+    return PackedPlan(ops=ops, params={"body": body, "head": head},
+                      n_masks=cfg.n_masks, groups=groups,
+                      out_ranges=tuple(cfg.out_ranges))
+
+
+def compile_mlp(model) -> PackedPlan:
+    """Any ``transform.MaskedMlp`` chain → PackedPlan.
+
+    Grammar: leading unmasked hidden layers become :class:`SharedDense`; a
+    run of consecutive masked hidden layers packs pairwise with its
+    successor (out-gather + paired in/out-gather); the final layer becomes
+    an :class:`OutputHead` (in-gathered when the last hidden was masked) or
+    is absorbed into the trailing pair. Chains that interleave unmasked
+    hidden layers *inside* a masked run are not expressible with packed
+    gathers alone and raise NotImplementedError.
+    """
+    spec, params = model.spec, model.params
+    widths = spec.widths
+    n_layers = len(widths) - 1
+    ops: list[Op] = []
+    plan_params: Params = {}
+    cur_idx: np.ndarray | None = None
+    i = 0
+    head_done = False
+    while i < n_layers - 1:
+        layer = params[f"fc{i}"]
+        if "masks" not in layer:
+            if cur_idx is not None:
+                raise NotImplementedError(
+                    "unmasked hidden layer with mask-gathered input "
+                    f"(layer {i}); reorder dropout slots to a trailing run")
+            name = f"fc{i}"
+            ops.append(SharedDense(name, d_in=widths[i], d_out=widths[i + 1],
+                                   activation=spec.activation))
+            plan_params[name] = {"w": layer["w"], "b": layer["b"]}
+            i += 1
+            continue
+        # masked layer i pairs with its successor (hidden or output layer)
+        idx = packing.kept_indices(_host_masks(layer["masks"]))
+        if cur_idx is None:
+            w1p = packing.pack_out_dim(layer["w"], idx)
+            d_in = widths[i]
+        else:
+            w1p = packing.pack_pair_dims(layer["w"], cur_idx, idx)
+            d_in = cur_idx.shape[1]
+        entry: Params = {"w1p": w1p, "b1p": packing.pack_out_dim(layer["b"],
+                                                                 idx)}
+        nxt = params[f"fc{i + 1}"]
+        nxt_masked = "masks" in nxt
+        if nxt_masked:
+            nidx = packing.kept_indices(_host_masks(nxt["masks"]))
+            entry["w2p"] = packing.pack_pair_dims(nxt["w"], idx, nidx)
+            entry["b2p"] = packing.pack_out_dim(nxt["b"], nidx)
+            d_out, cur_idx = nidx.shape[1], nidx
+        else:
+            entry["w2p"] = packing.pack_in_dim(nxt["w"], idx)
+            entry["b2"] = nxt["b"]
+            d_out, cur_idx = widths[i + 2], None
+        name = f"pair{i}"
+        ops.append(PackedPair(name, d_in=d_in, d_in_full=widths[i],
+                              hidden=widths[i + 1], keep=idx.shape[1],
+                              d_out=d_out, d_out_full=widths[i + 2],
+                              activation=spec.activation))
+        plan_params[name] = entry
+        if i + 1 == n_layers - 1:       # the pair consumed the output layer
+            if spec.final_activation:
+                ops.append(Activation(spec.final_activation))
+            head_done = True
+        else:
+            ops.append(Activation(spec.activation))
+        i += 2
+    if not head_done:
+        layer = params[f"fc{n_layers - 1}"]
+        if cur_idx is not None:
+            plan_params["head"] = {"wp": packing.pack_in_dim(layer["w"],
+                                                             cur_idx),
+                                   "b": layer["b"]}
+            ops.append(OutputHead("head", d_in=cur_idx.shape[1],
+                                  d_in_full=widths[n_layers - 1],
+                                  d_out=widths[n_layers],
+                                  activation=spec.final_activation,
+                                  per_mask=True))
+        else:
+            plan_params["head"] = {"w": layer["w"], "b": layer["b"]}
+            ops.append(OutputHead("head", d_in=widths[n_layers - 1],
+                                  d_out=widths[n_layers],
+                                  activation=spec.final_activation,
+                                  per_mask=False))
+    return PackedPlan(ops=tuple(ops), params=plan_params,
+                      n_masks=model.n_masks)
+
+
+def pack_ffn_leaves(ffn: Params, masks) -> Params:
+    """Transformer FFN block params {wg?, wu, wd} (leaves optionally stacked
+    [R, ...] over scan reps) + masks [N, F] → packed serving leaves
+    {wgp?, wup [.., N, D, K], wdp [.., N, K, D]} — the compiler-built form
+    ``models.layers.ffn_apply`` executes (via :func:`ffn_leaves_apply`)."""
+    idx = packing.kept_indices(_host_masks(masks))
+
+    def out_g(w: jax.Array) -> jax.Array:          # [.., D, F] -> [.., N, D, K]
+        return jnp.moveaxis(packing.gather_units(w, idx, axis=-1), 0, -3)
+
+    def in_g(w: jax.Array) -> jax.Array:           # [.., F, D] -> [.., N, K, D]
+        return jnp.moveaxis(packing.gather_units(w, idx, axis=-2), 0, -3)
+
+    out = {"wup": out_g(ffn["wu"]["w"]), "wdp": in_g(ffn["wd"]["w"])}
+    if "wg" in ffn:
+        out["wgp"] = out_g(ffn["wg"]["w"])
+    return out
+
+
+def ffn_leaves_apply(p: Params, x: jax.Array, activation: str) -> jax.Array:
+    """Execute packed transformer-FFN leaves: x [B, S, D] with rows grouped
+    mask-major (row j uses mask j // (B/N)) → same shape. The gated form
+    (wgp present) is silu/gelu-gated; hidden width is the kept K only."""
+    act = activation_fn(activation)
+    n = p["wdp"].shape[0]
+    b = x.shape[0]
+    assert b % n == 0, (b, n)
+    xg = x.reshape(n, b // n, *x.shape[1:])        # [N, B/N, S, D]
+    if "wgp" in p:
+        h = act(jnp.einsum("nbsd,ndk->nbsk", xg, p["wgp"])) * \
+            jnp.einsum("nbsd,ndk->nbsk", xg, p["wup"])
+    else:
+        h = act(jnp.einsum("nbsd,ndk->nbsk", xg, p["wup"]))
+    y = jnp.einsum("nbsk,nkd->nbsd", h, p["wdp"])
+    return y.reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# executor
+# ---------------------------------------------------------------------------
+
+
+def _run_pair(op: PackedPair, p: Params, h: jax.Array, backend: str | None,
+              kernel_kw: dict) -> jax.Array:
+    """One PackedPair. Shared input [B, D] with relu dispatches through the
+    masked_ffn kernel stack; per-sample input or non-relu activations take
+    the sample-major einsum form (same batch-level contraction order)."""
+    if h.ndim == 2 and op.activation == "relu":
+        b2 = p.get("b2")
+        if b2 is None:
+            b2 = jnp.zeros((p["w2p"].shape[-1],), h.dtype)
+        if backend == "xla":
+            from repro.kernels.masked_ffn import ref as mffn_ref
+            y = mffn_ref.masked_ffn_ref(h, p["w1p"], p["b1p"], p["w2p"], b2)
+        else:
+            from repro.kernels.masked_ffn import ops as mffn_ops
+            kw = dict(kernel_kw)
+            # an explicit interpret= from the caller wins over the backend
+            kw.setdefault("interpret", {None: None, "pallas-tpu": False,
+                                        "pallas-interpret": True}[backend])
+            y = mffn_ops.masked_ffn(h, p["w1p"], p["b1p"], p["w2p"], b2,
+                                    **kw)
+        if "b2p" in p:
+            y = y + p["b2p"][:, None, :].astype(y.dtype)
+        return y
+    act = activation_fn(op.activation)
+    lead = "bd" if h.ndim == 2 else "nbd"
+    hm = act(jnp.einsum(f"{lead},ndk->nbk", h, p["w1p"])
+             + p["b1p"][:, None, :])
+    y = jnp.einsum("nbk,nkm->nbm", hm, p["w2p"])
+    if "b2p" in p:
+        return y + p["b2p"][:, None, :]
+    return y + p["b2"] if "b2" in p else y
+
+
+def execute(plan: PackedPlan, x: jax.Array, *, backend: str | None = None,
+            **kernel_kw) -> jax.Array:
+    """Run a PackedPlan on a batch x [B, D] → samples [N, B, d_out].
+
+    backend: None → the process-wide ``compat.kernel_backend`` probe;
+    "xla" | "pallas-interpret" | "pallas-tpu" force a tier (in-process A/B —
+    the equivalence tests exercise xla and interpret side by side).
+    kernel_kw (block_b, sample_major) forward to the kernel wrapper.
+    """
+    h = x
+    for op in plan.ops:
+        if isinstance(op, Activation):
+            h = activation_fn(op.fn)(h)
+        elif isinstance(op, SharedDense):
+            p = plan.params[op.name]
+            if h.ndim == 2:
+                h = h @ p["w"]
+            else:
+                h = jnp.einsum("nbd,do->nbo", h, p["w"])
+            if "b" in p:
+                h = h + p["b"]
+            if op.activation:
+                h = activation_fn(op.activation)(h)
+        elif isinstance(op, PackedPair):
+            h = _run_pair(op, plan.params[op.name], h, backend, kernel_kw)
+        elif isinstance(op, OutputHead):
+            p = plan.params[op.name]
+            if op.per_mask:
+                h = jnp.einsum("nbk,nko->nbo", h, p["wp"])
+                if "bp" in p:
+                    h = h + p["bp"][:, None, :]
+            else:
+                lead = "bk" if h.ndim == 2 else "nbk"
+                h = jnp.einsum(f"{lead},ko->{'bo' if h.ndim == 2 else 'nbo'}",
+                               h, p["w"])
+            if "b" in p:
+                h = h + p["b"]
+            if op.activation:
+                h = activation_fn(op.activation)(h)
+        else:
+            raise TypeError(f"unknown plan op {op!r}")
+    if h.ndim == 2:                     # no packed ops: one degenerate sample
+        h = h[None]
+    if plan.groups > 1:                 # [G·N, B, Do] -> [N, B, G·Do]
+        g, n = plan.groups, plan.n_masks
+        b, do = h.shape[1], h.shape[2]
+        h = jnp.moveaxis(h.reshape(g, n, b, do), 0, 2).reshape(n, b, g * do)
+    if plan.out_ranges is not None:     # C(.): clinical range conversion
+        lo = jnp.asarray([r[0] for r in plan.out_ranges], h.dtype)
+        hi = jnp.asarray([r[1] for r in plan.out_ranges], h.dtype)
+        h = lo + h * (hi - lo)
+    return h

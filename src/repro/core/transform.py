@@ -19,12 +19,13 @@ mask_scale fields) rather than through MlpSpec.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Mapping, Sequence
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import latency_model, masks as masks_lib, masksembles, packing
+from repro.core import latency_model, masks as masks_lib, masksembles
+from repro.core import plan as plan_lib
 from repro.core import scheduler as sched_lib
 from repro.core import uncertainty as unc_lib
 
@@ -58,10 +59,9 @@ class MlpSpec:
                 raise ValueError(f"dropout_after index {i} is not a hidden layer")
 
 
-_ACTS: dict[str, Callable[[jax.Array], jax.Array]] = {
-    "relu": jax.nn.relu, "gelu": jax.nn.gelu, "silu": jax.nn.silu,
-    "sigmoid": jax.nn.sigmoid, "identity": lambda x: x,
-}
+# the one activation table — shared with the mask compiler so any name that
+# trains here also compiles there
+_ACTS = plan_lib.ACTIVATIONS
 
 
 @dataclasses.dataclass
@@ -134,7 +134,7 @@ def grid_search_space(widths_scales: Sequence[float] = (1.2, 1.5, 2.0, 3.0),
 @dataclasses.dataclass(frozen=True)
 class HardwarePlan:
     """Phase-3 artifact: how to serve the accepted model on TPU."""
-    packed_params: Params                # mask-zero-skipped weights
+    plan: plan_lib.PackedPlan            # compiled serving program (op IR)
     schedule: sched_lib.Schedule         # batch-level by default
     modeled_latency_s: float             # latency_model estimate per batch
     modeled_baseline_s: float            # sampling-level, unpacked estimate
@@ -148,47 +148,24 @@ class HardwarePlan:
 
 def plan_hardware(model: MaskedMlp, batch: int,
                   spec: latency_model.TpuSpec = latency_model.V5E) -> HardwarePlan:
-    """Emit packed weights + schedule + modeled latency for a MaskedMlp.
+    """Emit the compiled PackedPlan + schedule + modeled latency for a
+    MaskedMlp.
 
-    Packs every (masked-hidden → next) layer pair; layers without masks stay
-    shared. Latency is modeled per masked pair and summed (the unmasked final
-    encoder is sample-independent only in shape — it still runs per sample —
-    and is included in both estimates, so the *ratio* isolates the paper's
-    two optimizations).
+    Compilation (BN folding, kept-index gathering, pair fusion, schedule) is
+    entirely :func:`repro.core.plan.compile_mlp`'s; the latency and traffic
+    estimates are priced from the plan's own op metadata — the packed run on
+    the batch-level schedule vs the unpacked sampling-level baseline on the
+    *same op list*, so the ratio isolates the paper's two optimizations.
     """
-    packed: Params = {"shared": {}, "pairs": []}
-    widths = model.spec.widths
-    lat_opt = lat_base = 0.0
-    traffic = None
-    for i in range(len(widths) - 1):
-        layer = model.params[f"fc{i}"]
-        if "masks" in layer and i + 1 < len(widths) - 1:
-            nxt = model.params[f"fc{i + 1}"]
-            masks = jax.device_get(layer["masks"]).astype(bool)
-            pair = packing.pack_masked_ffn(layer["w"], layer["b"],
-                                           nxt["w"], nxt["b"], masks)
-            packed["pairs"].append({"first_layer": i, "packed": pair})
-            keep = int(masks[0].sum())
-            lat_opt += latency_model.masked_ffn_latency(
-                batch, model.n_masks, widths[i], widths[i + 1], keep,
-                widths[i + 2], packed=True, batch_level=True, spec=spec)
-            lat_base += latency_model.masked_ffn_latency(
-                batch, model.n_masks, widths[i], widths[i + 1], keep,
-                widths[i + 2], packed=False, batch_level=False, spec=spec)
-            traffic = sched_lib.traffic_model(
-                sched_lib.Schedule("batch"), batch, model.n_masks,
-                widths[i], keep, widths[i + 2])
-        elif "masks" not in layer:
-            packed["shared"][f"fc{i}"] = {"w": layer["w"], "b": layer["b"]}
-    if traffic is None:
-        traffic = sched_lib.traffic_model(sched_lib.Schedule("batch"), batch,
-                                          model.n_masks, widths[0],
-                                          widths[1], widths[-1])
+    pplan = plan_lib.compile_mlp(model)
     notes = ("mask-zero skipping: packed dense per-sample weights",
              "batch-level schedule: weights loaded once per sample per batch",
              "sub-network parallelism exploited via vmap (deviation §8.4)")
-    return HardwarePlan(packed_params=packed,
-                        schedule=sched_lib.Schedule("batch"),
-                        modeled_latency_s=lat_opt,
-                        modeled_baseline_s=lat_base,
-                        traffic=traffic, notes=notes)
+    return HardwarePlan(plan=pplan,
+                        schedule=pplan.schedule,
+                        modeled_latency_s=pplan.modeled_latency(
+                            batch, spec=spec),
+                        modeled_baseline_s=pplan.modeled_latency(
+                            batch, spec=spec, packed=False,
+                            batch_level=False),
+                        traffic=pplan.traffic(batch), notes=notes)

@@ -34,10 +34,10 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import masks as masks_lib
-from repro.core import masksembles, packing, uncertainty
+from repro.core import masksembles, uncertainty
+from repro.core import plan as plan_lib
 from repro.ivim import physics
 
 Params = dict[str, Any]
@@ -218,77 +218,38 @@ def reconstruct(cfg: IvimConfig, ivim_params: jax.Array) -> jax.Array:
                                d, dstar, f, s0)
 
 
-# ---- Phase-3 serving form: BN folding + mask-zero skipping -----------------
+# ---- Phase-3 serving form: compiled by the core mask pipeline --------------
+#
+# BN folding, kept-index gathering and the batch-level schedule all live in
+# repro.core.plan (the single mask-compilation pipeline); the wrappers below
+# only bind it to the IVIM naming.
 
 def fold_bn(cfg: IvimConfig, params: Params, state: Params) -> Params:
     """Fold inference-mode BN into the preceding dense: returns params with
     plain fc1/fc2 (w', b') and no bn — exact at eval time."""
     if not cfg.use_batchnorm:
         return params
-    out = {k: v for k, v in params.items() if k not in ("bn1", "bn2")}
-
-    def fold(fc: Params, bn: Params, st: Params) -> Params:
-        inv = bn["gamma"] * jax.lax.rsqrt(st["var"] + 1e-5)
-        return {"w": fc["w"] * inv[None, :],
-                "b": (fc["b"] - st["mean"]) * inv + bn["beta"]}
-
-    out["fc1"] = jax.vmap(fold)(params["fc1"], params["bn1"], state["bn1"])
-    out["fc2"] = jax.vmap(fold)(params["fc2"], params["bn2"], state["bn2"])
-    return out
+    return plan_lib.fold_bn_ivim(params, state)
 
 
-def pack_for_serving(cfg: IvimConfig, params: Params, state: Params) -> Params:
+def pack_for_serving(cfg: IvimConfig, params: Params,
+                     state: Params) -> plan_lib.PackedPlan:
     """Mask-zero skipping over the fc1->fc2->enc chain (paper §V-C).
 
-    fc1's output units are masked by mask1 and fc2's by mask2, so the packed
-    per-sample weights are
-        w1p [4, N, Nb, K1]   (gather mask1-kept outputs)
-        w2p [4, N, K1, K2]   (gather mask1-kept inputs x mask2-kept outputs)
-        w3p [4, N, K2, 1]    (gather mask2-kept inputs)
-    FLOPs shrink by ~ (K/H)^2 on the middle layer.
+    Returns the compiled :class:`repro.core.plan.PackedPlan`: one PackedPair
+    (fc1+fc2, both hidden dims gathered — FLOPs shrink by ~(K/H)² on the
+    middle layer) plus the sigmoid OutputHead, with the 4 sub-networks
+    flattened onto the kernel sample axis. Execute with :func:`packed_apply`
+    (or ``plan.execute`` directly).
     """
-    if not cfg.bayesian:
-        raise ValueError("packing requires a Masksembles model")
-    p = fold_bn(cfg, params, state)
-    idx1 = packing.kept_indices(np.asarray(p["mask1"], bool))
-    idx2 = packing.kept_indices(np.asarray(p["mask2"], bool))
-
-    def pack_one(fc1: Params, fc2: Params, enc: Params) -> Params:
-        return {
-            "w1p": packing.pack_out_dim(fc1["w"], idx1),
-            "b1p": packing.pack_out_dim(fc1["b"], idx1),
-            "w2p": jnp.stack([jnp.take(jnp.take(fc2["w"], idx1[i], axis=0),
-                                       idx2[i], axis=1)
-                              for i in range(idx1.shape[0])]),
-            "b2p": packing.pack_out_dim(fc2["b"], idx2),
-            "w3p": packing.pack_in_dim(enc["w"], idx2),
-            "b3": enc["b"],
-        }
-
-    packed = jax.vmap(pack_one)(p["fc1"], p["fc2"], p["enc"])
-    packed["kept_idx1"] = jnp.asarray(idx1)
-    packed["kept_idx2"] = jnp.asarray(idx2)
-    return packed
+    return plan_lib.compile_ivim(cfg, params, state)
 
 
-def packed_apply(cfg: IvimConfig, packed: Params, x: jax.Array) -> jax.Array:
+def packed_apply(plan: plan_lib.PackedPlan, x: jax.Array, **kw) -> jax.Array:
     """Batch-level packed inference: [B, Nb] -> samples [N, B, 4].
 
-    Sample-major contraction order == the paper's batch-level scheme: each
-    packed weight slice is touched once while the whole batch streams
-    through. Numerics match apply_all_samples(fold_bn(...)) exactly
-    (relu(z)*m == relu(z*m) for binary m).
-    """
-    def one_subnet(pk):
-        h = jax.nn.relu(jnp.einsum("bd,ndk->nbk", x, pk["w1p"])
-                        + pk["b1p"][:, None, :])
-        h = jax.nn.relu(jnp.einsum("nbk,nkj->nbj", h, pk["w2p"])
-                        + pk["b2p"][:, None, :])
-        z = jnp.einsum("nbj,njo->nbo", h, pk["w3p"]) + pk["b3"]
-        return jax.nn.sigmoid(z[..., 0])           # [N, B]
-
-    sub = {k: packed[k] for k in ("w1p", "b1p", "w2p", "b2p", "w3p", "b3")}
-    sig = jax.vmap(one_subnet)(sub)                 # [4, N, B]
-    n, b = sig.shape[1], sig.shape[2]
-    return jax.vmap(lambda s: _convert(cfg, s))(
-        jnp.moveaxis(sig, 1, 0))                    # [N, B, 4]
+    The plan carries everything (weights, schedule, C(.) ranges); dispatches
+    every PackedPair through kernels/masked_ffn (Pallas-TPU → interpret →
+    XLA ref). Numerics match apply_all_samples(fold_bn(...)) exactly
+    (relu(z)*m == relu(z*m) for binary m)."""
+    return plan_lib.execute(plan, x, **kw)

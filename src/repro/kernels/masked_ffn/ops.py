@@ -17,7 +17,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
-from repro.core import packing
 from repro.kernels.masked_ffn import ref as _ref
 
 # None iff Pallas is absent (the xla tier); backend probing stays lazy so
@@ -81,11 +80,12 @@ def masked_ffn(x: jax.Array, w1p: jax.Array, b1p: jax.Array,
 def masked_ffn_all_samples(x: jax.Array, w1: jax.Array, b1: jax.Array,
                            w2: jax.Array, b2: jax.Array,
                            masks: np.ndarray | jax.Array, **kw) -> jax.Array:
-    """Unpacked entry: packs offline (mask-zero skipping) then runs the
-    kernel. Matches ref.unpacked_masked_ffn_ref numerics exactly."""
-    packed = packing.pack_masked_ffn(w1, b1, w2, b2, masks)
-    return masked_ffn(x, packed["w1p"], packed["b1p"], packed["w2p"],
-                      packed["b2"], **kw)
+    """Unpacked entry: compiles a one-pair PackedPlan (mask-zero skipping,
+    core/plan.py) and executes it through this kernel's dispatch stack.
+    Matches ref.unpacked_masked_ffn_ref numerics exactly."""
+    from repro.core import plan as plan_lib  # lazy: plan dispatches back here
+    plan = plan_lib.compile_masked_ffn(w1, b1, w2, b2, masks)
+    return plan_lib.execute(plan, x, **kw)
 
 
 # Re-export the oracle so callers can A/B without importing ref directly.

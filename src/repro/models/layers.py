@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import masks as masks_lib
+from repro.core import plan as plan_lib
 
 Params = dict[str, Any]
 
@@ -415,20 +416,10 @@ def ffn_apply(p: Params, x: jax.Array, cfg,
     zero-preserving, so the serving path may pack instead (packed leaves,
     mask-zero skipping: rows must be grouped [sample0 rows..., sample1
     rows, ...] as serve_uncertain arranges)."""
-    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
-           "gelu_mlp": jax.nn.gelu}[cfg.activation]
-    if "wdp" in p:                               # packed serving form
-        n = p["wdp"].shape[0]
-        b = x.shape[0]
-        assert b % n == 0, (b, n)
-        xg = x.reshape(n, b // n, *x.shape[1:])  # [N, B/N, S, D]
-        if "wgp" in p:
-            h = act(jnp.einsum("nbsd,ndk->nbsk", xg, p["wgp"])) * \
-                jnp.einsum("nbsd,ndk->nbsk", xg, p["wup"])
-        else:
-            h = act(jnp.einsum("nbsd,ndk->nbsk", xg, p["wup"]))
-        y = jnp.einsum("nbsk,nkd->nbsd", h, p["wdp"])
-        return y.reshape(x.shape)
+    act = plan_lib.activation_fn(cfg.activation)
+    if "wdp" in p:                               # packed serving form —
+        # executed by the mask-compilation pipeline (one implementation)
+        return plan_lib.ffn_leaves_apply(p, x, cfg.activation)
     if "wg" in p:
         h = act(dense(p["wg"], x)) * dense(p["wu"], x)
     else:

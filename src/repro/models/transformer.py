@@ -430,36 +430,22 @@ def pack_ffn_params(cfg: ModelConfig, params: Params) -> Params:
     """Checkpoint conversion: trained masked-FFN weights -> per-sample packed
     serving weights (mask-zero skipping, paper §V-C / Fig. 4).
 
-    Only dense gated/plain FFN blocks are packed (MoE experts and the
-    recurrent-family block-internal masks keep the multiply form). Use with
-    ``dataclasses.replace(cfg, packed_ffn_serving=True)``; numerically exact
-    vs the masked form (tests/test_models_smoke.py)."""
-    import numpy as np
-
-    from repro.core import packing
-
-    def pack_ffn(ffn: Params) -> Params:
-        masks = np.asarray(jax.device_get(ffn["masks"][0]), bool)  # [N, F]
-        idx = packing.kept_indices(masks)                          # [N, K]
-        out = {}
-        if "wg" in ffn:
-            out["wgp"] = jnp.stack(
-                [jnp.take(ffn["wg"]["w"], idx[i], axis=-1)
-                 for i in range(idx.shape[0])], axis=1)            # [R,N,D,K]
-        out["wup"] = jnp.stack(
-            [jnp.take(ffn["wu"]["w"], idx[i], axis=-1)
-             for i in range(idx.shape[0])], axis=1)
-        out["wdp"] = jnp.stack(
-            [jnp.take(ffn["wd"]["w"], idx[i], axis=-2)
-             for i in range(idx.shape[0])], axis=1)                # [R,N,K,D]
-        return out
+    Thin wrapper over the mask-compilation pipeline: every dense gated/plain
+    FFN block's leaves are gathered by ``repro.core.plan.pack_ffn_leaves``
+    (MoE experts and the recurrent-family block-internal masks keep the
+    multiply form). Use with ``dataclasses.replace(cfg,
+    packed_ffn_serving=True)``; numerically exact vs the masked form
+    (tests/test_models_smoke.py)."""
+    from repro.core import plan as plan_lib
 
     new = jax.tree.map(lambda x: x, params)  # shallow-ish copy
-    for si, seg in enumerate(new["segments"]):
-        for bk, block in seg.items():
+    for seg in new["segments"]:
+        for block in seg.values():
             if isinstance(block, dict) and "ffn" in block and \
                     "masks" in block["ffn"]:
-                block["ffn"] = pack_ffn(block["ffn"])
+                # masks are identical across scan reps (same seed per config)
+                block["ffn"] = plan_lib.pack_ffn_leaves(
+                    block["ffn"], block["ffn"]["masks"][0])
     return new
 
 

@@ -35,6 +35,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import plan as plan_lib
+from repro.core import uncertainty as unc_lib
 from repro.models.model import Model
 from repro.serving import server as server_lib
 from repro.serving.server import mesh_scope
@@ -42,7 +44,7 @@ from repro.serving.server import mesh_scope
 Params = dict[str, Any]
 
 __all__ = ["ServeConfig", "generate", "uncertainty_decode_step",
-           "serve_uncertain"]
+           "serve_uncertain", "predict_packed"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +72,36 @@ def generate(model: Model, params: Params, tokens: jax.Array,
 
 def _expand_for_masks(x: jax.Array, n: int) -> jax.Array:
     return jnp.tile(x, (n,) + (1,) * (x.ndim - 1))
+
+
+def predict_packed(plan: plan_lib.PackedPlan, x: jax.Array, *,
+                   chunk: int | None = None, backend: str | None = None
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Serve a compiled PackedPlan on a voxel batch: x [B, D] ->
+    (mean [B, d_out], std [B, d_out]).
+
+    The feed-forward analogue of :func:`serve_uncertain`: the engine consumes
+    the Phase-3 artifact directly — every PackedPair dispatches through
+    kernels/masked_ffn on the batch-level schedule — and reduces the mask
+    samples to predictive moments. ``chunk`` bounds the resident batch (a
+    volume is streamed in fixed-shape slices so the kernel retraces once);
+    ``backend`` forwards to :func:`repro.core.plan.execute`.
+    """
+    b = x.shape[0]
+    if chunk is None or chunk >= b:
+        return unc_lib.predictive_moments(
+            plan_lib.execute(plan, x, backend=backend))
+    pad = (-b) % chunk
+    xp = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]) \
+        if pad else x
+    xc = xp.reshape(-1, chunk, *x.shape[1:])
+
+    def body(_, xb):
+        return None, plan_lib.execute(plan, xb, backend=backend)
+
+    _, ys = jax.lax.scan(body, None, xc)           # [B/chunk, N, chunk, Do]
+    ys = jnp.moveaxis(ys, 1, 0).reshape(ys.shape[1], -1, ys.shape[-1])[:, :b]
+    return unc_lib.predictive_moments(ys)
 
 
 def uncertainty_decode_step(model: Model, params: Params, caches,

@@ -69,7 +69,7 @@ def test_packed_serving_exact():
     x = D.make_dataset(D.SyntheticConfig(n_voxels=64, seed=2))["signals"]
     want = M.apply_all_samples(cfg, params, state, x)
     packed = M.pack_for_serving(cfg, params, state)
-    got = M.packed_apply(cfg, packed, x)
+    got = M.packed_apply(packed, x)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-4, atol=2e-5)
 

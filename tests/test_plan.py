@@ -1,0 +1,214 @@
+"""PackedPlan equivalence — one compile path from masks to kernels.
+
+``plan.execute(compile(model))`` must match the unpacked all-samples form
+for every model family (IVIM, MaskedMlp, transformer FFN) across the mask
+grid N ∈ {1, 4, 8} × scale ∈ {1.0, 2.0}, on both the pure-XLA reference
+tier and the Pallas interpreter tier (in-process A/B via
+``execute(backend=...)``; the full suite additionally runs under
+``REPRO_KERNEL_BACKEND=xla`` as ci.sh's second tier-1 leg).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import masks as masks_lib
+from repro.core import plan as plan_lib
+from repro.core import transform
+from repro.ivim import model as ivim_model
+from repro.serving import engine
+
+GRID = [(n, s) for n in (1, 4, 8) for s in (1.0, 2.0)]
+BACKENDS = ("xla", "pallas-interpret")
+
+
+def _close(got, want, tol=2e-4):
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# IVIM
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("n_masks,scale", GRID)
+def test_ivim_plan_matches_unpacked(n_masks, scale, backend):
+    cfg = ivim_model.IvimConfig(n_masks=n_masks, scale=scale)
+    params, state = ivim_model.init(cfg, jax.random.PRNGKey(n_masks))
+    x = jax.random.uniform(jax.random.PRNGKey(1), (6, cfg.width))
+    want = ivim_model.apply_all_samples(cfg, params, state, x)
+    plan = plan_lib.compile_ivim(cfg, params, state)
+    _close(plan_lib.execute(plan, x, backend=backend), want)
+
+
+def test_ivim_plan_no_batchnorm():
+    cfg = ivim_model.IvimConfig(n_masks=4, scale=2.0, use_batchnorm=False)
+    params, state = ivim_model.init(cfg, jax.random.PRNGKey(0))
+    x = jax.random.uniform(jax.random.PRNGKey(1), (5, cfg.width))
+    want = ivim_model.apply_all_samples(cfg, params, state, x)
+    plan = plan_lib.compile_ivim(cfg, params, state)
+    _close(plan_lib.execute(plan, x, backend="xla"), want)
+
+
+def test_ivim_plan_dispatches_masked_ffn_kernel(monkeypatch):
+    """Acceptance: the IVIM PackedPair goes through kernels/masked_ffn —
+    the same dispatch stack the transformer FFN uses."""
+    from repro.kernels.masked_ffn import ops as mffn_ops
+    calls = []
+    real = mffn_ops.masked_ffn
+
+    def spy(*args, **kw):
+        calls.append(args[1].shape)     # w1p [G·N, Nb, K1]
+        return real(*args, **kw)
+
+    monkeypatch.setattr(mffn_ops, "masked_ffn", spy)
+    cfg = ivim_model.IvimConfig(n_masks=4, scale=2.0)
+    params, state = ivim_model.init(cfg, jax.random.PRNGKey(0))
+    plan = ivim_model.pack_for_serving(cfg, params, state)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (4, cfg.width))
+    plan_lib.execute(plan, x, backend="pallas-interpret")
+    assert len(calls) == 1              # one fused pair, 4 sub-networks on
+    assert calls[0][0] == 4 * cfg.n_masks  # the kernel's sample axis
+
+
+def test_ivim_plan_structure_and_schedule():
+    cfg = ivim_model.IvimConfig(n_masks=4, scale=2.0)
+    params, state = ivim_model.init(cfg, jax.random.PRNGKey(0))
+    plan = plan_lib.compile_ivim(cfg, params, state)
+    kinds = [type(op).__name__ for op in plan.ops]
+    assert kinds == ["PackedPair", "Activation", "OutputHead"]
+    assert plan.schedule.kind == "batch"
+    assert plan.groups == 4 and plan.sample_axis == 16
+    pair = plan.pairs[0]
+    assert pair.keep < cfg.width            # FLOPs actually shrink
+    ss = plan.slot_schedule(max_slots=8)
+    assert ss.n_masks == cfg.n_masks and ss.rows == 32
+    # batch-level traffic beats the sampling-level baseline on the same plan
+    from repro.core import scheduler
+    t_batch = plan.traffic(256)
+    t_samp = plan.traffic(256, schedule=scheduler.Schedule("sampling",
+                                                           chunk=64))
+    assert t_batch.weight_bytes < t_samp.weight_bytes
+    assert t_batch.weight_loads == plan.sample_axis
+
+
+# ---------------------------------------------------------------------------
+# MaskedMlp (transform flow)
+# ---------------------------------------------------------------------------
+
+
+def _mlp(widths, dropout_after, n_masks, scale, seed=0):
+    spec = transform.MlpSpec(widths=widths, dropout_after=dropout_after,
+                             final_activation="sigmoid")
+    return transform.convert(spec, n_masks=n_masks, scale=scale,
+                             key=jax.random.PRNGKey(seed))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("n_masks,scale", GRID)
+def test_mlp_plan_matches_unpacked(n_masks, scale, backend):
+    model = _mlp((7, 16, 16, 2), (1, 2), n_masks, scale)
+    x = jax.random.normal(jax.random.PRNGKey(2), (9, 7))
+    want = model.apply_all_samples(model.params, x)
+    plan = plan_lib.compile_mlp(model)
+    _close(plan_lib.execute(plan, x, backend=backend), want)
+
+
+def test_mlp_plan_leading_shared_layer():
+    """Unmasked leading layers compile to SharedDense ops."""
+    model = _mlp((9, 12, 16, 16, 3), (2, 3), 4, 2.0)
+    plan = plan_lib.compile_mlp(model)
+    kinds = [type(op).__name__ for op in plan.ops]
+    assert kinds[0] == "SharedDense" and "PackedPair" in kinds
+    x = jax.random.normal(jax.random.PRNGKey(3), (5, 9))
+    want = model.apply_all_samples(model.params, x)
+    _close(plan_lib.execute(plan, x, backend="xla"), want)
+
+
+def test_mlp_plan_pair_absorbs_output_layer():
+    """A masked layer directly before the head fuses head into the pair."""
+    model = _mlp((6, 14, 2), (1,), 4, 2.0)
+    plan = plan_lib.compile_mlp(model)
+    assert not any(isinstance(op, plan_lib.OutputHead) for op in plan.ops)
+    x = jax.random.normal(jax.random.PRNGKey(4), (7, 6))
+    want = model.apply_all_samples(model.params, x)
+    _close(plan_lib.execute(plan, x, backend="xla"), want)
+
+
+def test_plan_hardware_emits_executable_plan():
+    """transform.plan_hardware's Phase-3 artifact carries the PackedPlan and
+    prices latency/traffic from its op metadata."""
+    model = _mlp((11, 32, 32, 1), (1, 2), 4, 2.0)
+    hp = transform.plan_hardware(model, batch=512)
+    x = jax.random.normal(jax.random.PRNGKey(5), (16, 11))
+    want = model.apply_all_samples(model.params, x)
+    _close(plan_lib.execute(hp.plan, x, backend="xla"), want)
+    assert hp.modeled_speedup > 1.0
+    assert hp.traffic.weight_loads == model.n_masks
+
+
+# ---------------------------------------------------------------------------
+# transformer FFN block
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("gated", [True, False])
+@pytest.mark.parametrize("n_masks,scale", GRID)
+def test_transformer_ffn_leaves_match_masked(n_masks, scale, gated):
+    d, f, b, s = 8, 24, 3, 4
+    ks = jax.random.split(jax.random.PRNGKey(n_masks), 4)
+    ffn = {"wu": {"w": jax.random.normal(ks[0], (d, f)) * 0.3},
+           "wd": {"w": jax.random.normal(ks[1], (f, d)) * 0.3}}
+    if gated:
+        ffn["wg"] = {"w": jax.random.normal(ks[2], (d, f)) * 0.3}
+    masks = masks_lib.generate_masks(
+        masks_lib.MaskSpec(width=f, n_masks=n_masks, scale=scale))
+    x = jax.random.normal(ks[3], (n_masks * b, s, d))
+    xg = x.reshape(n_masks, b, s, d)
+    if gated:
+        h = jax.nn.silu(xg @ ffn["wg"]["w"]) * (xg @ ffn["wu"]["w"])
+    else:
+        h = jax.nn.gelu(xg @ ffn["wu"]["w"])
+    h = h * jnp.asarray(masks, h.dtype)[:, None, None, :]
+    want = (h @ ffn["wd"]["w"]).reshape(x.shape)
+    leaves = plan_lib.pack_ffn_leaves(ffn, masks)
+    got = plan_lib.ffn_leaves_apply(leaves, x,
+                                    "silu" if gated else "gelu_mlp")
+    _close(got, want)
+
+
+def test_pack_ffn_leaves_stacked_reps():
+    """Scan-stacked FFN leaves [R, D, F] pack to [R, N, D, K] (the layout
+    distributed.sharding maps to PartitionSpecs)."""
+    r, d, f, n = 3, 6, 16, 4
+    ffn = {"wu": {"w": jnp.ones((r, d, f))}, "wd": {"w": jnp.ones((r, f, d))}}
+    masks = masks_lib.generate_masks(
+        masks_lib.MaskSpec(width=f, n_masks=n, scale=2.0))
+    k = int(masks[0].sum())
+    leaves = plan_lib.pack_ffn_leaves(ffn, masks)
+    assert leaves["wup"].shape == (r, n, d, k)
+    assert leaves["wdp"].shape == (r, n, k, d)
+
+
+# ---------------------------------------------------------------------------
+# serving engine consumes plans
+# ---------------------------------------------------------------------------
+
+
+def test_engine_predict_packed_matches_predict():
+    cfg = ivim_model.IvimConfig(n_masks=4, scale=2.0)
+    params, state = ivim_model.init(cfg, jax.random.PRNGKey(0))
+    x = jax.random.uniform(jax.random.PRNGKey(1), (10, cfg.width))
+    want_mean, want_std = ivim_model.predict(cfg, params, state, x)
+    plan = ivim_model.pack_for_serving(cfg, params, state)
+    mean, std = engine.predict_packed(plan, x, backend="xla")
+    _close(mean, want_mean)
+    _close(std, want_std)
+    # chunked volume streaming is exact (pad rows dropped)
+    mean_c, std_c = engine.predict_packed(plan, x, chunk=4, backend="xla")
+    _close(mean_c, want_mean)
+    _close(std_c, want_std)

@@ -39,7 +39,7 @@ def test_packed_serving_after_training(trained_uivim):
                                          seed=9))["signals"]
     want = M.apply_all_samples(cfg, params, state, x)
     packed = M.pack_for_serving(cfg, params, state)
-    got = M.packed_apply(cfg, packed, x)
+    got = M.packed_apply(packed, x)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=5e-3, atol=5e-4)
 
