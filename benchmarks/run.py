@@ -58,13 +58,26 @@ def main() -> None:
 
     print()
     print("=" * 72)
-    print("bench_ivim_packed — PackedPlan IVIM volume serving vs unpacked")
+    print("bench_ivim_packed — fused megakernel vs per-op plan vs unpacked")
     print("=" * 72)
     ivp = bench_ivim_packed.run(smoke=args.smoke)
     csv.append(("ivim_packed_plan_speedup", ivp["speedup"],
                 "plan-compiled packed serving vs apply_all_samples, wall"))
     csv.append(("ivim_packed_traffic_reduction", ivp["traffic_reduction"],
                 "plan traffic: sampling-level / batch-level weight bytes"))
+    csv.append(("ivim_fused_vs_per_op_speedup", ivp["fused_vs_per_op"],
+                "whole-plan megakernel vs per-op executor, wall"))
+    csv.append(("ivim_fused_bytes_reduction", ivp["fused_bytes_reduction"],
+                "plan traffic: per-op / fused modeled HBM bytes"))
+    # canonical perf-trajectory artifact (fused vs per-op vs unpacked, with
+    # backend + shape provenance) — future PRs compare against this file.
+    # Smoke runs must not clobber the committed full-size numbers.
+    if args.smoke:
+        print(f"[smoke] skipping {bench_ivim_packed.BENCH_JSON} "
+              f"(full-size runs only)")
+    else:
+        bench_ivim_packed.write_bench_json(ivp)
+        print(f"wrote {bench_ivim_packed.BENCH_JSON}")
 
     print()
     print("=" * 72)

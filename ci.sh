@@ -36,3 +36,10 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_serving --s
 # Packed-plan smoke: IVIM volume through the compiled PackedPlan path vs the
 # unpacked baseline (equivalence is tested; this guards the bench wiring).
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_ivim_packed --smoke
+
+# Fused-megakernel smoke: the whole-plan kernels/fused_plan Pallas kernel
+# under the interpreter (not just its xla ref), one launch + in-kernel
+# moments per chunk; the bench exits nonzero if fused and per-op moments
+# diverge.
+REPRO_KERNEL_BACKEND=pallas-interpret \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_ivim_packed --smoke --fused

@@ -47,6 +47,17 @@ def main() -> None:
     print(f"packed serving: hidden {cfg.width} -> {keep} units/sample, "
           f"max|err| vs training form = {err:.2e}")
 
+    # Serve a whole scan: voxel chunks stream through the fused whole-plan
+    # megakernel (one launch per chunk, in-kernel moments — the [N, B, 4]
+    # sample tensor is never materialized).
+    from repro.serving import engine
+    nx, ny, nz = 16, 16, 2
+    volume = ds["signals"][: nx * ny * nz].reshape(nx, ny, nz, cfg.width)
+    vmean, vstd = engine.predict_volume(plan, volume, chunk=128)
+    print(f"volume serving: {volume.shape} -> mean/std {vmean.shape}, "
+          f"D at center = {np.asarray(vmean[nx // 2, ny // 2, 0, 0]):.5f} "
+          f"+/- {np.asarray(vstd[nx // 2, ny // 2, 0, 0]):.5f}")
+
 
 if __name__ == "__main__":
     main()

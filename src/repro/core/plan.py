@@ -52,7 +52,9 @@ activations are zero-preserving (relu(z)·m == relu(z·m) for binary m).
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import functools
 from typing import Any, Callable
 
 import jax
@@ -61,6 +63,8 @@ import numpy as np
 
 from repro.core import latency_model, packing
 from repro.core import scheduler as sched_lib
+from repro.kernels.fused_plan import ref as fused_ref
+from repro.kernels.fused_plan.ref import FusedPlanUnsupported
 
 Params = dict[str, Any]
 
@@ -68,6 +72,8 @@ __all__ = [
     "SharedDense", "PackedPair", "Activation", "OutputHead", "PackedPlan",
     "fold_bn_dense", "fold_bn_ivim", "compile_ivim", "compile_mlp",
     "compile_masked_ffn", "pack_ffn_leaves", "ffn_leaves_apply", "execute",
+    "lower_fused", "execute_fused", "fused_executor",
+    "FusedPlanUnsupported", "fused_trace_counts",
 ]
 
 #: The one activation-name table for the mask pipeline and the model specs
@@ -190,33 +196,96 @@ class PackedPlan:
                                       max_slots=max_slots)
 
     def traffic(self, batch: int, bytes_per_el: int = 2,
-                schedule: sched_lib.Schedule | None = None
+                schedule: sched_lib.Schedule | None = None, *,
+                fused: bool = False, moments: bool = False
                 ) -> sched_lib.TrafficModel:
-        """Summed HBM traffic of the plan's packed pairs under a schedule
+        """Modeled HBM traffic of one batch, fed straight from op metadata.
+
+        Default (``fused=False``): summed pair traffic under a schedule
         (defaults to the plan's own) — the quantity the batch-level reorder
-        optimizes, fed straight from op metadata."""
-        schedule = schedule or self.schedule
+        optimizes. Each per-op kernel launch reads its input activations
+        from HBM and writes its output back.
+
+        ``fused=True`` prices the whole-plan megakernel
+        (:func:`execute_fused`): every packed weight set — *all layers
+        together* — crosses HBM→VMEM once per sample row
+        (``weight_loads = sample_axis``), and inter-layer activations stay
+        in VMEM scratch. With ``moments=True`` (weights-resident grid, the
+        serving fast path) the input batch crosses once and only the
+        predictive (mean, std) come back out; in samples mode the
+        ``(n_rows, B/bB)`` grid re-fetches each input tile per sample row
+        and writes the full ``[N, B, d_out]`` tensor. Shared prefix FLOPs
+        are priced once (the moments kernel hoists them out of the sample
+        loop).
+        """
         n = self.sample_axis
-        w = a = f = loads = 0
-        for op in self.pairs:
-            tm = sched_lib.traffic_model(schedule, batch, n, op.d_in,
-                                         op.keep, op.d_out, bytes_per_el)
-            w += tm.weight_bytes
-            a += tm.act_bytes
-            f += tm.flops
-            loads += tm.weight_loads
-        return sched_lib.TrafficModel(weight_bytes=w, act_bytes=a, flops=f,
-                                      weight_loads=loads)
+        if not fused:
+            schedule = schedule or self.schedule
+            w = a = f = loads = 0
+            for op in self.pairs:
+                tm = sched_lib.traffic_model(schedule, batch, n, op.d_in,
+                                             op.keep, op.d_out, bytes_per_el)
+                w += tm.weight_bytes
+                a += tm.act_bytes
+                f += tm.flops
+                loads += tm.weight_loads
+            return sched_lib.TrafficModel(weight_bytes=w, act_bytes=a,
+                                          flops=f, weight_loads=loads)
+        w_el = flops = 0
+        d_first = d_last = None
+        for op in self.ops:
+            if isinstance(op, SharedDense):
+                w_el += op.d_in * op.d_out + op.d_out
+                flops += 2 * batch * op.d_in * op.d_out
+            elif isinstance(op, PackedPair):
+                w_el += n * (op.d_in * op.keep + op.keep
+                             + op.keep * op.d_out + op.d_out)
+                flops += 2 * n * batch * (op.d_in * op.keep
+                                          + op.keep * op.d_out)
+            elif isinstance(op, OutputHead):
+                rows = n if op.per_mask else 1
+                w_el += rows * (op.d_in * op.d_out + op.d_out)
+                flops += 2 * rows * batch * op.d_in * op.d_out
+            else:
+                continue
+            if d_first is None:
+                d_first = op.d_in
+            d_last = op.d_out
+        in_el = batch * d_first * (1 if moments else n)
+        out_el = (2 * batch * self.groups * d_last if moments
+                  else n * batch * d_last)
+        act_bytes = (in_el + out_el) * bytes_per_el
+        return sched_lib.TrafficModel(weight_bytes=w_el * bytes_per_el,
+                                      act_bytes=act_bytes, flops=flops,
+                                      weight_loads=n)
+
+    def fused_spec(self) -> fused_ref.FusedSpec:
+        """Static kernel spec of this plan's fused lowering (shape-key of
+        the cached executor; raises FusedPlanUnsupported when the op chain
+        has no fused form)."""
+        return lower_fused(self)[0]
 
     def modeled_latency(self, batch: int, *,
                         spec: latency_model.TpuSpec = latency_model.V5E,
                         packed: bool = True, batch_level: bool = True,
-                        bytes_per_el: int = 2) -> float:
+                        bytes_per_el: int = 2, fused: bool = False,
+                        moments: bool = True) -> float:
         """Eq.-2-analogue latency of one batch, summed over ops. With
         ``packed=False, batch_level=False`` this prices the conventional
         BayesNN baseline (full hidden widths, weights re-streamed per voxel
-        chunk) on the same op list."""
+        chunk) on the same op list. ``fused=True`` prices the whole-plan
+        megakernel instead: a single launch (one fill term) at the roofline
+        of the fused traffic model — per-op kernel fills and inter-layer
+        HBM round-trips disappear. ``moments`` (fused only) selects the
+        in-kernel-moments variant (the serving fast path, default) vs the
+        samples-mode grid that writes the full sample tensor."""
         n = self.sample_axis
+        if fused:
+            tm = self.traffic(batch, bytes_per_el, fused=True,
+                              moments=moments)
+            return max(tm.flops / spec.peak_flops_bf16,
+                       tm.total_bytes / spec.hbm_bw) \
+                + spec.kernel_fill_us * 1e-6
         t = 0.0
         for op in self.ops:
             if isinstance(op, PackedPair):
@@ -456,6 +525,11 @@ def ffn_leaves_apply(p: Params, x: jax.Array, activation: str) -> jax.Array:
 # executor
 # ---------------------------------------------------------------------------
 
+#: Explicit per-call backend override -> kernel ``interpret=`` flag
+#: (None defers to the process-wide probe). One table for both executors.
+_BACKEND_INTERPRET: dict[str | None, bool | None] = {
+    None: None, "pallas-tpu": False, "pallas-interpret": True}
+
 
 def _run_pair(op: PackedPair, p: Params, h: jax.Array, backend: str | None,
               kernel_kw: dict) -> jax.Array:
@@ -473,8 +547,7 @@ def _run_pair(op: PackedPair, p: Params, h: jax.Array, backend: str | None,
             from repro.kernels.masked_ffn import ops as mffn_ops
             kw = dict(kernel_kw)
             # an explicit interpret= from the caller wins over the backend
-            kw.setdefault("interpret", {None: None, "pallas-tpu": False,
-                                        "pallas-interpret": True}[backend])
+            kw.setdefault("interpret", _BACKEND_INTERPRET[backend])
             y = mffn_ops.masked_ffn(h, p["w1p"], p["b1p"], p["w2p"], b2,
                                     **kw)
         if "b2p" in p:
@@ -533,6 +606,11 @@ def execute(plan: PackedPlan, x: jax.Array, *, backend: str | None = None,
             raise TypeError(f"unknown plan op {op!r}")
     if h.ndim == 2:                     # no packed ops: one degenerate sample
         h = h[None]
+    return _finalize(plan, h)
+
+
+def _finalize(plan: PackedPlan, h: jax.Array) -> jax.Array:
+    """Executor epilogue: un-flatten the kernel sample axis and apply C(.)."""
     if plan.groups > 1:                 # [G·N, B, Do] -> [N, B, G·Do]
         g, n = plan.groups, plan.n_masks
         b, do = h.shape[1], h.shape[2]
@@ -542,3 +620,153 @@ def execute(plan: PackedPlan, x: jax.Array, *, backend: str | None = None,
         hi = jnp.asarray([r[1] for r in plan.out_ranges], h.dtype)
         h = lo + h * (hi - lo)
     return h
+
+
+# ---------------------------------------------------------------------------
+# fused whole-plan executor (kernels/fused_plan megakernel)
+# ---------------------------------------------------------------------------
+
+
+def lower_fused(plan: PackedPlan
+                ) -> tuple[fused_ref.FusedSpec, tuple[jax.Array, ...]]:
+    """Lower the op chain to the fused megakernel IR.
+
+    Returns ``(spec, params)``: a hashable :class:`kernels.fused_plan.ref.
+    FusedSpec` — a flat chain of dense/elementwise steps with each weight
+    tagged sample-shared or per-row — plus the flat param tuple in
+    ``param_slots`` order. A trailing :class:`Activation` fuses into the
+    preceding dense step; a PackedPair lowers to two dense steps (its hidden
+    activation becomes a VMEM-resident intermediate of the megakernel).
+    Raises :class:`FusedPlanUnsupported` for op kinds with no fused form.
+    """
+    steps: list[fused_ref.FusedStep] = []
+    params: list[jax.Array] = []
+    for op in plan.ops:
+        if isinstance(op, Activation):
+            if steps and steps[-1].kind == "dense" \
+                    and steps[-1].activation is None:
+                steps[-1] = dataclasses.replace(steps[-1], activation=op.fn)
+            else:
+                steps.append(fused_ref.FusedStep("act", activation=op.fn))
+            continue
+        if isinstance(op, SharedDense):
+            p = plan.params[op.name]
+            steps.append(fused_ref.FusedStep(
+                "dense", op.activation, shared_bias="b" in p,
+                d_in=op.d_in, d_out=op.d_out))
+            params.append(p["w"])
+            if "b" in p:
+                params.append(p["b"])
+        elif isinstance(op, PackedPair):
+            p = plan.params[op.name]
+            steps.append(fused_ref.FusedStep(
+                "dense", op.activation, per_sample=True, sample_bias=True,
+                d_in=op.d_in, d_out=op.keep))
+            params += [p["w1p"], p["b1p"]]
+            steps.append(fused_ref.FusedStep(
+                "dense", None, per_sample=True, shared_bias="b2" in p,
+                sample_bias="b2p" in p, d_in=op.keep, d_out=op.d_out))
+            params.append(p["w2p"])
+            if "b2" in p:
+                params.append(p["b2"])
+            if "b2p" in p:
+                params.append(p["b2p"])
+        elif isinstance(op, OutputHead):
+            p = plan.params[op.name]
+            steps.append(fused_ref.FusedStep(
+                "dense", op.activation, per_sample=op.per_mask,
+                shared_bias="b" in p, sample_bias="bp" in p,
+                d_in=op.d_in, d_out=op.d_out))
+            params.append(p["wp"] if op.per_mask else p["w"])
+            if "b" in p:
+                params.append(p["b"])
+            if "bp" in p:
+                params.append(p["bp"])
+        else:
+            raise FusedPlanUnsupported(f"op {op!r} has no fused lowering")
+    dense = [s for s in steps if s.kind == "dense"]
+    spec = fused_ref.FusedSpec(steps=tuple(steps), n_rows=plan.sample_axis,
+                               n_masks=plan.n_masks, groups=plan.groups,
+                               d_in=dense[0].d_in, d_out=dense[-1].d_out)
+    return spec, tuple(params)
+
+
+#: Trace counters of the cached fused executors, keyed by
+#: ``(spec, backend, moments)`` — incremented once per jit trace, so
+#: repeated same-shape ``predict_packed`` calls must leave them at 1.
+fused_trace_counts: collections.Counter = collections.Counter()
+
+
+@functools.lru_cache(maxsize=128)
+def _fused_runner(spec: fused_ref.FusedSpec, backend: str | None,
+                  moments: bool, block_b: int):
+    """One jitted executor per (plan shape-key, backend, mode) — the plan
+    analogue of serving/server's ``step_fns`` cache: the returned callable
+    is stable across calls, so jit's own shape cache applies and repeated
+    ``predict_packed`` calls stop retracing."""
+
+    def run(x: jax.Array, params: tuple[jax.Array, ...]):
+        fused_trace_counts[(spec, backend, moments)] += 1
+        if backend == "xla":
+            fn = (fused_ref.fused_moments_ref if moments
+                  else fused_ref.fused_plan_ref)
+            return fn(spec, x, params)
+        from repro.kernels.fused_plan import ops as fp_ops
+        return fp_ops.fused_plan(spec, x, params, moments=moments,
+                                 block_b=block_b,
+                                 interpret=_BACKEND_INTERPRET[backend])
+
+    return jax.jit(run)
+
+
+def fused_executor(plan: PackedPlan, *, moments: bool = False,
+                   backend: str | None = None,
+                   block_b: int = 128) -> Callable[[jax.Array], Any]:
+    """Lower once, serve many: returns ``x -> fused result`` bound to the
+    cached jitted runner, so chunk-streaming hot paths (serving/engine) pay
+    the Python lowering a single time per call, not once per chunk.
+
+    Raises :class:`FusedPlanUnsupported` immediately when the op chain has
+    no fused lowering; the moments-mode VMEM-residency guard fires later,
+    from the first ``apply`` (trace time) — callers that want the per-op
+    fallback must catch around that first call too.
+    """
+    if backend not in (None, "xla", "pallas-interpret", "pallas-tpu"):
+        raise ValueError(f"unknown backend {backend!r}")
+    spec, params = lower_fused(plan)
+    runner = _fused_runner(spec, backend, moments, block_b)
+
+    def apply(x: jax.Array):
+        out = runner(x, params)
+        if not moments:
+            return _finalize(plan, out)
+        mean, std = out                 # [B, G·do], group-major columns
+        if plan.out_ranges is not None:  # C(.) is affine: commutes with E[.]
+            lo = jnp.asarray([r[0] for r in plan.out_ranges], mean.dtype)
+            hi = jnp.asarray([r[1] for r in plan.out_ranges], mean.dtype)
+            mean = lo + mean * (hi - lo)
+            std = std * jnp.abs(hi - lo)
+        return mean, std
+
+    return apply
+
+
+def execute_fused(plan: PackedPlan, x: jax.Array, *, moments: bool = False,
+                  backend: str | None = None, block_b: int = 128):
+    """Run the whole plan in ONE kernel launch (kernels/fused_plan).
+
+    x [B, D] -> samples [N, B, d_out], or ``moments=True`` ->
+    (mean [B, d_out], std [B, d_out]) reduced over the mask axis *inside*
+    the kernel (running Welford mean/M2), so the full sample tensor is
+    never materialized. Matches ``execute`` / ``uncertainty.
+    predictive_moments(execute(...))`` to fp32 tolerance.
+
+    backend: None -> the process-wide ``compat.kernel_backend`` probe;
+    "xla" | "pallas-interpret" | "pallas-tpu" force a tier. Executors are
+    cached per (plan shape-key, backend, mode) — see :data:`fused_trace_
+    counts`. Raises :class:`FusedPlanUnsupported` when the plan has no
+    fused form or (moments mode) its resident footprint exceeds the VMEM
+    guard (callers fall back to :func:`execute`).
+    """
+    return fused_executor(plan, moments=moments, backend=backend,
+                          block_b=block_b)(x)

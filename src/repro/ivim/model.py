@@ -245,11 +245,18 @@ def pack_for_serving(cfg: IvimConfig, params: Params,
     return plan_lib.compile_ivim(cfg, params, state)
 
 
-def packed_apply(plan: plan_lib.PackedPlan, x: jax.Array, **kw) -> jax.Array:
+def packed_apply(plan: plan_lib.PackedPlan, x: jax.Array, *,
+                 fused: bool = False, **kw) -> jax.Array:
     """Batch-level packed inference: [B, Nb] -> samples [N, B, 4].
 
-    The plan carries everything (weights, schedule, C(.) ranges); dispatches
-    every PackedPair through kernels/masked_ffn (Pallas-TPU → interpret →
-    XLA ref). Numerics match apply_all_samples(fold_bn(...)) exactly
-    (relu(z)*m == relu(z*m) for binary m)."""
+    The plan carries everything (weights, schedule, C(.) ranges). The
+    default per-op executor dispatches every PackedPair through
+    kernels/masked_ffn (Pallas-TPU → interpret → XLA ref); ``fused=True``
+    runs the whole fc1→fc2→enc chain in ONE kernels/fused_plan launch
+    (inter-layer activations never leave VMEM). The per-op path matches
+    apply_all_samples(fold_bn(...)) exactly (relu(z)*m == relu(z*m) for
+    binary m); the fused path matches to fp32 tolerance (~1e-7 — f32
+    scratch accumulation reassociates the contractions)."""
+    if fused:
+        return plan_lib.execute_fused(plan, x, **kw)
     return plan_lib.execute(plan, x, **kw)

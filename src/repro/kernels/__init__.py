@@ -8,6 +8,9 @@ Each kernel lives in its own subpackage with the canonical trio:
 Kernels:
   masked_ffn      — the paper's §V core: packed per-sample 2-layer FFN with a
                     sample-major (batch-level) weight-stationary grid.
+  fused_plan      — whole-PackedPlan megakernel: the entire compiled op chain
+                    in one launch, inter-layer activations VMEM-resident,
+                    optional in-kernel Welford moments over the sample axis.
   moments         — fused mean/std over the mask-sample axis (uncertainty
                     aggregation, paper §IV evaluation stage).
   flash_attention — blockwise online-softmax attention for the LM prefill
@@ -16,6 +19,7 @@ Kernels:
                     (RecurrentGemma's RG-LRU hot spot; beyond-paper).
 """
 
+from repro.kernels.fused_plan import ops as fused_plan  # noqa: F401
 from repro.kernels.masked_ffn import ops as masked_ffn  # noqa: F401
 from repro.kernels.moments import ops as moments  # noqa: F401
 from repro.kernels.flash_attention import ops as flash_attention  # noqa: F401

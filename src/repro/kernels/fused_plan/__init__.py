@@ -1,0 +1,2 @@
+from repro.kernels.fused_plan.ops import (  # noqa: F401
+    FusedPlanUnsupported, fused_plan, fused_vmem_bytes)

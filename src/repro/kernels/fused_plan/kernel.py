@@ -1,0 +1,223 @@
+"""Pallas TPU megakernel: an entire PackedPlan op chain in one pallas_call.
+
+The per-op executor (``core/plan.execute``) launches one masked_ffn kernel
+per PackedPair and runs SharedDense/OutputHead as separate XLA ops, so every
+inter-layer activation ``[N·G, B, K]`` round-trips HBM. This kernel streams
+the *whole* compiled chain instead — the TPU realization of the paper's FPGA
+pipeline, which keeps each mask-sample's packed weights on-chip and pushes
+the full network through them (§V-B "intermediate layer cache" + §V-D
+operation reordering). Two modes:
+
+* **samples mode** — ``grid = (n_rows, B/bB)`` with the sample row outermost
+  (the batch-level scheme of kernels/masked_ffn, extended from one pair to
+  the whole chain): every per-sample weight BlockSpec depends only on the
+  row index, so each row's packed weights for *all* layers cross HBM→VMEM
+  once while the entire batch streams through. Inter-layer activations live
+  in two ping-pong VMEM scratch tiles ``[bB, Wmax]`` and never touch HBM.
+  Output: ``[n_rows, B, d_out]``.
+
+* **moments mode** — ``grid = (B/bB,)`` with *all* packed weights passed as
+  whole-array blocks (constant index maps: one HBM→VMEM crossing per weight
+  set for the entire batch — the FPGA's weights-resident regime, which is
+  what makes an in-kernel sample reduction legal: no output block is ever
+  revisited across grid steps). The sample loop is unrolled inside the
+  kernel; a running Welford (mean, M2) epilogue — the ``kernels/moments``
+  scheme, streamed — reduces over the ``n_masks`` rows of each group, so
+  the ``[n_rows, B, d_out]`` sample tensor is never materialized anywhere,
+  VMEM included. Steps before the first per-sample op are hoisted out of
+  the sample loop (computed once per batch tile). Output:
+  ``(mean, std) [B, groups·d_out]``, group-major columns.
+
+Padding contract (ops.py): every width is zero-padded to the 128 lane; this
+is exact because padded *rows* of the next weight are zero, so whatever a
+non-zero-preserving activation (sigmoid) writes into padded columns is
+annihilated by the following matmul, and final padded columns/rows are
+sliced off by the wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.fused_plan import ref as _spec_lib
+
+__all__ = ["fused_plan_pallas"]
+
+
+def _dense(h, w, b, bp, activation):
+    """One fused dense step on f32 hidden state (operands in weight dtype)."""
+    y = jnp.dot(h.astype(w.dtype), w, preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b[None, :].astype(jnp.float32)
+    if bp is not None:
+        y = y + bp[None, :].astype(jnp.float32)
+    if activation:
+        y = _spec_lib.act_fn(activation)(y)
+    return y
+
+
+def _run_chain(steps, read, h, sbufs):
+    """Run (index, step) pairs over ping-pong VMEM scratch.
+
+    ``read(i, slot)`` yields the step's weight/bias block for the current
+    sample row. After every dense step the activation is stored to a scratch
+    tile and read back, so the inter-layer state provably lives in VMEM and
+    the footprint is bounded by 2×[bB, Wmax] regardless of chain depth.
+    """
+    buf = 0
+    for i, st in steps:
+        if st.kind == "act":
+            h = _spec_lib.act_fn(st.activation)(h)
+            continue
+        y = _dense(h, read(i, "w"),
+                   read(i, "b") if st.shared_bias else None,
+                   read(i, "bp") if st.sample_bias else None,
+                   st.activation)
+        sbufs[buf][:, : y.shape[1]] = y
+        h = sbufs[buf][:, : y.shape[1]]
+        buf ^= 1
+    return h
+
+
+def _split_prefix(spec):
+    """(shared prefix, per-sample body) as (index, step) lists."""
+    steps = list(enumerate(spec.steps))
+    for cut, (_, st) in enumerate(steps):
+        if st.per_sample or st.sample_bias:
+            return steps[:cut], steps[cut:]
+    return steps, []
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "block_b", "moments", "interpret"))
+def fused_plan_pallas(x: jax.Array, params: tuple[jax.Array, ...], *,
+                      spec: _spec_lib.FusedSpec, block_b: int = 128,
+                      moments: bool = False, interpret: bool = False):
+    """x [B, d_in_pad], params padded per the ops.py contract.
+
+    moments=False -> samples [n_rows, B, d_out_pad]
+    moments=True  -> (mean, std) [B, groups * d_out_pad]
+    B must be divisible by block_b; widths must be lane-aligned (ops pads).
+    """
+    b, d0 = x.shape
+    if b % block_b:
+        raise ValueError(f"batch {b} not divisible by block_b {block_b}")
+    nb = b // block_b
+    slots = _spec_lib.param_slots(spec)
+    table = dict(zip(slots, params))
+    n_rows, groups, n_masks = spec.n_rows, spec.groups, spec.n_masks
+
+    # padded widths along the chain (spec widths are unpadded; the arrays
+    # are authoritative): final dense output + the scratch width cap
+    widths = [d0]
+    for (i, slot) in slots:
+        if slot == "w":
+            widths.append(table[(i, "w")].shape[-1])
+    wmax = max(widths)
+    d_last = widths[-1]
+
+    scratch = [pltpu.VMEM((block_b, wmax), jnp.float32),
+               pltpu.VMEM((block_b, wmax), jnp.float32)]
+
+    if not moments:
+        # ------- samples mode: grid (n_rows, B/bB), sample-major ----------
+        in_specs = [pl.BlockSpec((block_b, d0), lambda n, j: (j, 0))]
+        for (i, slot) in slots:
+            arr = table[(i, slot)]
+            st = spec.steps[i]
+            per = st.per_sample if slot == "w" else (slot == "bp")
+            if per:
+                blk = (1,) + arr.shape[1:]
+                in_specs.append(pl.BlockSpec(
+                    blk, lambda n, j, nd=arr.ndim: (n,) + (0,) * (nd - 1)))
+            else:
+                in_specs.append(pl.BlockSpec(
+                    arr.shape, lambda n, j, nd=arr.ndim: (0,) * nd))
+
+        def kernel(x_ref, *refs):
+            p_refs = dict(zip(slots, refs[: len(slots)]))
+            o_ref = refs[len(slots)]
+            sbufs = refs[len(slots) + 1:]
+
+            def read(i, slot):
+                st = spec.steps[i]
+                r = p_refs[(i, slot)]
+                per = st.per_sample if slot == "w" else (slot == "bp")
+                return r[0] if per else r[...]
+
+            h = _run_chain(list(enumerate(spec.steps)), read,
+                           x_ref[...].astype(jnp.float32), sbufs)
+            o_ref[0] = h.astype(o_ref.dtype)
+
+        return pl.pallas_call(
+            kernel,
+            grid=(n_rows, nb),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, block_b, d_last),
+                                   lambda n, j: (n, j, 0)),
+            out_shape=jax.ShapeDtypeStruct((n_rows, b, d_last), x.dtype),
+            scratch_shapes=scratch,
+            interpret=interpret,
+        )(x, *params)
+
+    # ------- moments mode: grid (B/bB,), weights resident ----------------
+    in_specs = [pl.BlockSpec((block_b, d0), lambda i: (i, 0))]
+    for (i, slot) in slots:
+        arr = table[(i, slot)]
+        in_specs.append(pl.BlockSpec(
+            arr.shape, lambda i, nd=arr.ndim: (0,) * nd))
+    prefix, body = _split_prefix(spec)
+
+    def kernel(x_ref, *refs):
+        p_refs = dict(zip(slots, refs[: len(slots)]))
+        mean_ref, std_ref = refs[len(slots)], refs[len(slots) + 1]
+        sbufs = refs[len(slots) + 2: len(slots) + 4]
+        pfx_ref = refs[len(slots) + 4]
+
+        def read_shared(i, slot):
+            return p_refs[(i, slot)][...]
+
+        # shared prefix: once per batch tile, parked in its own scratch
+        h0 = _run_chain(prefix, read_shared, x_ref[...].astype(jnp.float32),
+                        sbufs)
+        w0 = h0.shape[1]
+        pfx_ref[:, :w0] = h0
+
+        for g in range(groups):
+            mean = m2 = None
+            for k in range(n_masks):
+                r = g * n_masks + k
+
+                def read(i, slot, r=r):
+                    st = spec.steps[i]
+                    ref = p_refs[(i, slot)]
+                    per = st.per_sample if slot == "w" else (slot == "bp")
+                    return ref[r] if per else ref[...]
+
+                y = _run_chain(body, read, pfx_ref[:, :w0], sbufs)
+                if k == 0:                          # Welford running moments
+                    mean, m2 = y, jnp.zeros_like(y)
+                else:
+                    delta = y - mean
+                    mean = mean + delta / (k + 1)
+                    m2 = m2 + delta * (y - mean)
+            cols = slice(g * d_last, (g + 1) * d_last)
+            mean_ref[:, cols] = mean.astype(mean_ref.dtype)
+            std_ref[:, cols] = jnp.sqrt(m2 / n_masks).astype(std_ref.dtype)
+
+    out_blk = pl.BlockSpec((block_b, groups * d_last), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=in_specs,
+        out_specs=(out_blk, out_blk),
+        out_shape=(jax.ShapeDtypeStruct((b, groups * d_last), x.dtype),
+                   jax.ShapeDtypeStruct((b, groups * d_last), x.dtype)),
+        scratch_shapes=scratch + [pltpu.VMEM((block_b, wmax), jnp.float32)],
+        interpret=interpret,
+    )(x, *params)

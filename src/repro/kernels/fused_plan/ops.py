@@ -1,0 +1,122 @@
+"""Public wrapper for the fused whole-plan megakernel.
+
+Backend select once per process on first call (Pallas-TPU → Pallas-interpret
+→ pure-XLA reference via ``repro.compat.kernel_backend``, lazy so importing
+never initializes jax devices), lane/batch padding (exact — padded weight
+rows are zero, see kernel.py), output unpadding, and the VMEM-residency
+guard for the weights-resident moments mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro import compat
+from repro.kernels.fused_plan import ref as _ref
+from repro.kernels.fused_plan.ref import (FusedPlanUnsupported, FusedSpec,
+                                          param_slots)
+from repro.kernels.pad import pad_to as _pad_to
+
+# None iff Pallas is absent (the xla tier); backend probing stays lazy so
+# importing this module never initializes jax device state.
+_kernel = compat.import_pallas_kernel("repro.kernels.fused_plan.kernel")
+
+__all__ = ["fused_plan", "fused_vmem_bytes", "FusedPlanUnsupported",
+           "VMEM_MOMENTS_LIMIT", "KERNEL_BACKEND"]
+
+#: Resident-footprint cap for the moments mode (all packed weights + scratch
+#: must sit in VMEM at once — the paper's on-chip-weights regime). Plans past
+#: this fall back to the per-op executor (serving/engine handles the catch).
+VMEM_MOMENTS_LIMIT = 96 * 2 ** 20
+
+
+def __getattr__(name: str) -> str:
+    if name == "KERNEL_BACKEND":    # public, resolved on first access
+        return compat.kernel_backend_for(_kernel)
+    raise AttributeError(name)
+
+
+def _pad_params(spec: FusedSpec, params: tuple[jax.Array, ...]
+                ) -> tuple[jax.Array, ...]:
+    out = []
+    for (i, slot), arr in zip(param_slots(spec), params):
+        st = spec.steps[i]
+        per = st.per_sample if slot == "w" else (slot == "bp")
+        if per and arr.shape[0] != spec.n_rows:
+            raise ValueError(f"step {i} {slot}: leading dim {arr.shape[0]} "
+                             f"!= n_rows {spec.n_rows}")
+        a = _pad_to(arr, arr.ndim - 1, 128)
+        if slot == "w":
+            a = _pad_to(a, arr.ndim - 2, 128)
+        out.append(a)
+    return tuple(out)
+
+
+def fused_vmem_bytes(spec: FusedSpec, block_b: int = 128,
+                     bytes_per_el: int = 4) -> int:
+    """Modeled resident VMEM footprint of the moments-mode kernel: all
+    padded weight sets + 3 scratch tiles + the batch tile and outputs."""
+    def pad(d: int) -> int:
+        return -(-d // 128) * 128
+
+    w_el = 0
+    widths = [spec.d_in]
+    for st in spec.steps:
+        if st.kind != "dense":
+            continue
+        rows = spec.n_rows if st.per_sample else 1
+        w_el += rows * pad(st.d_in) * pad(st.d_out)
+        if st.shared_bias:
+            w_el += pad(st.d_out)
+        if st.sample_bias:
+            w_el += spec.n_rows * pad(st.d_out)
+        widths.append(st.d_out)
+    wmax = max(pad(d) for d in widths)
+    scratch_el = 3 * block_b * wmax + block_b * pad(widths[0])
+    out_el = 2 * block_b * spec.groups * pad(widths[-1])
+    return (w_el + scratch_el + out_el) * bytes_per_el
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "moments", "block_b", "interpret"))
+def fused_plan(spec: FusedSpec, x: jax.Array, params: tuple[jax.Array, ...],
+               *, moments: bool = False, block_b: int = 128,
+               interpret: bool | None = None):
+    """Execute a lowered PackedPlan chain in one kernel launch.
+
+    x [B, d_in], params per ``ref.param_slots`` order (unpadded) ->
+    samples [n_rows, B, d_out], or (mean, std) [B, groups·d_out] with
+    ``moments=True``. interpret=None -> auto (True off-TPU).
+    """
+    if compat.kernel_backend_for(_kernel) == "xla":
+        fn = _ref.fused_moments_ref if moments else _ref.fused_plan_ref
+        return fn(spec, x, tuple(params))
+    if interpret is None:
+        interpret = compat.pallas_interpret_default()
+    b = x.shape[0]
+    block_b = min(block_b, max(8, 1 << (b - 1).bit_length()))
+    if moments and fused_vmem_bytes(spec, block_b) > VMEM_MOMENTS_LIMIT:
+        raise FusedPlanUnsupported(
+            f"moments-mode fused plan needs "
+            f"{fused_vmem_bytes(spec, block_b)} resident bytes "
+            f"(> {VMEM_MOMENTS_LIMIT}); use the per-op executor")
+    xp = _pad_to(_pad_to(x, 1, 128), 0, block_b)
+    pp = _pad_params(spec, tuple(params))
+    out = _kernel.fused_plan_pallas(xp, pp, spec=spec, block_b=block_b,
+                                    moments=moments, interpret=interpret)
+    do = spec.d_out
+    if not moments:
+        return out[:, :b, :do]
+    mean, std = out
+    g = spec.groups
+    dlp = mean.shape[1] // g
+    mean = mean[:b].reshape(b, g, dlp)[:, :, :do].reshape(b, g * do)
+    std = std[:b].reshape(b, g, dlp)[:, :, :do].reshape(b, g * do)
+    return mean, std
+
+
+# Re-export the oracle pair so callers can A/B without importing ref directly.
+fused_plan_ref = _ref.fused_plan_ref
+fused_moments_ref = _ref.fused_moments_ref

@@ -1,0 +1,172 @@
+"""Fused whole-plan executor: spec IR + pure-jnp oracle tier.
+
+This module owns the *contract* between ``core/plan.lower_fused`` and the
+three execution tiers (Pallas-TPU / Pallas-interpret in kernel.py, the
+pure-XLA reference here): a :class:`FusedSpec` is a flat, hashable chain of
+matmul/elementwise steps over a running hidden state, with every weight
+either sample-shared or per-sample-row (``n_rows = groups × n_masks`` packed
+weight sets). The oracle executes the chain with plain einsums — same
+contraction order as the per-op ``plan.execute`` path — and is what the
+equivalence tests assert against.
+
+Params travel as a flat tuple ordered by :func:`param_slots`: for each dense
+step, ``w`` then (if present) shared bias ``b`` then per-sample bias ``bp``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["FusedStep", "FusedSpec", "FusedPlanUnsupported", "param_slots",
+           "act_fn", "fused_plan_ref", "fused_moments_ref"]
+
+
+class FusedPlanUnsupported(NotImplementedError):
+    """Raised when a PackedPlan cannot run through the fused executor
+    (unknown op kind, or a footprint the moments kernel cannot hold
+    VMEM-resident). Callers fall back to the per-op ``plan.execute`` path."""
+
+
+#: Same table as core/plan.ACTIVATIONS — duplicated here (not imported) so
+#: the kernel tier never has to import the compiler package.
+_ACTS: dict[str, Callable[[jax.Array], jax.Array]] = {
+    "relu": jax.nn.relu, "gelu": jax.nn.gelu, "silu": jax.nn.silu,
+    "sigmoid": jax.nn.sigmoid, "tanh": jnp.tanh, "identity": lambda x: x,
+}
+
+
+def act_fn(name: str) -> Callable[[jax.Array], jax.Array]:
+    return _ACTS["gelu" if name == "gelu_mlp" else name]
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedStep:
+    """One step of the fused chain.
+
+    kind='dense': ``h @ w (+ b) (+ bp[n]) -> activation`` with ``w`` indexed
+    by the sample row when ``per_sample`` (``[n_rows, d_in, d_out]``) and
+    shared (``[d_in, d_out]``) otherwise. kind='act': bare elementwise
+    nonlinearity (no params; only emitted when it cannot fuse into the
+    preceding dense).
+    """
+    kind: str                       # 'dense' | 'act'
+    activation: str | None = None
+    per_sample: bool = False
+    shared_bias: bool = False
+    sample_bias: bool = False
+    d_in: int = 0
+    d_out: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedSpec:
+    """Static description of a whole-plan fused execution (hashable — the
+    jit/lru cache key in ``core/plan``)."""
+    steps: tuple[FusedStep, ...]
+    n_rows: int                     # kernel sample axis (groups × n_masks)
+    n_masks: int
+    groups: int
+    d_in: int                       # chain input width
+    d_out: int                      # final per-row output width
+
+    def __post_init__(self) -> None:
+        if self.n_rows != self.groups * self.n_masks:
+            raise ValueError(f"n_rows {self.n_rows} != groups*n_masks")
+        if not any(s.kind == "dense" for s in self.steps):
+            raise FusedPlanUnsupported("fused chain has no dense step")
+
+    @property
+    def weight_elements(self) -> int:
+        """Total (unpadded) weight+bias elements — VMEM sizing input."""
+        tot = 0
+        for s in self.steps:
+            if s.kind != "dense":
+                continue
+            rows = self.n_rows if s.per_sample else 1
+            tot += rows * s.d_in * s.d_out
+            if s.shared_bias:
+                tot += s.d_out
+            if s.sample_bias:
+                tot += self.n_rows * s.d_out
+        return tot
+
+
+def param_slots(spec: FusedSpec) -> tuple[tuple[int, str], ...]:
+    """Flat param ordering: (step index, 'w'|'b'|'bp') per array."""
+    slots: list[tuple[int, str]] = []
+    for i, st in enumerate(spec.steps):
+        if st.kind != "dense":
+            continue
+        slots.append((i, "w"))
+        if st.shared_bias:
+            slots.append((i, "b"))
+        if st.sample_bias:
+            slots.append((i, "bp"))
+    return tuple(slots)
+
+
+def _slot_table(spec: FusedSpec, params: tuple[jax.Array, ...]
+                ) -> dict[tuple[int, str], jax.Array]:
+    slots = param_slots(spec)
+    if len(slots) != len(params):
+        raise ValueError(f"fused spec expects {len(slots)} params, "
+                         f"got {len(params)}")
+    return dict(zip(slots, params))
+
+
+def fused_plan_ref(spec: FusedSpec, x: jax.Array,
+                   params: tuple[jax.Array, ...]) -> jax.Array:
+    """Oracle tier: x [B, d_in] -> per-row samples [n_rows, B, d_out].
+
+    Shared prefix steps run once on [B, d]; the first per-sample step
+    introduces the row axis and the rest of the chain is sample-major
+    einsums (the batch-level contraction order).
+    """
+    table = _slot_table(spec, params)
+    h = x
+    for i, st in enumerate(spec.steps):
+        if st.kind == "act":
+            h = act_fn(st.activation)(h)
+            continue
+        w = table[(i, "w")]
+        if st.per_sample:
+            lead = "bd" if h.ndim == 2 else "nbd"
+            y = jnp.einsum(f"{lead},ndk->nbk", h, w)
+        elif h.ndim == 2:
+            y = h @ w
+        else:
+            y = jnp.einsum("nbd,dk->nbk", h, w)
+        if st.shared_bias:
+            y = y + table[(i, "b")]
+        if st.sample_bias:
+            bp = table[(i, "bp")]
+            if y.ndim == 2:             # per-sample bias on a shared value
+                y = y[None] + bp[:, None, :]
+            else:
+                y = y + bp[:, None, :]
+        if st.activation:
+            y = act_fn(st.activation)(y)
+        h = y
+    if h.ndim == 2:                     # fully shared chain: rows identical
+        h = jnp.broadcast_to(h[None], (spec.n_rows,) + h.shape)
+    return h
+
+
+def fused_moments_ref(spec: FusedSpec, x: jax.Array,
+                      params: tuple[jax.Array, ...]
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the in-kernel moments epilogue: x [B, d_in] ->
+    (mean [B, groups·d_out], std [B, groups·d_out]); the reduction is over
+    the ``n_masks`` rows *within* each group (ddof=0), matching
+    ``uncertainty.predictive_moments`` of the group-unflattened samples."""
+    s = fused_plan_ref(spec, x, params)          # [G·N, B, do]
+    g, n = spec.groups, spec.n_masks
+    b, do = s.shape[1], s.shape[2]
+    sg = s.reshape(g, n, b, do)
+    mean = jnp.moveaxis(jnp.mean(sg, axis=1), 0, 1).reshape(b, g * do)
+    std = jnp.moveaxis(jnp.std(sg, axis=1), 0, 1).reshape(b, g * do)
+    return mean, std

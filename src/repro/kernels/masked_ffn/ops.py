@@ -13,11 +13,11 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
 from repro.kernels.masked_ffn import ref as _ref
+from repro.kernels.pad import pad_to as _pad_to
 
 # None iff Pallas is absent (the xla tier); backend probing stays lazy so
 # importing this module never initializes jax device state.
@@ -35,16 +35,6 @@ def __getattr__(name: str) -> str:
 
 def on_tpu() -> bool:
     return compat.on_tpu()
-
-
-def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
-    size = x.shape[axis]
-    pad = (-size) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "sample_major",

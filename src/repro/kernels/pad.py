@@ -1,0 +1,26 @@
+"""Shared zero-padding helper for the kernel ops wrappers.
+
+Every Pallas wrapper pads operands to the 128 lane / batch-tile multiple
+before the ``pallas_call`` and slices the result back; the padding is exact
+for the mask pipeline because padded weight rows are zero (see the kernel
+docstrings). One implementation so the kernel stacks cannot silently
+diverge on padding behavior.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pad_to"]
+
+
+def pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    """Zero-pad ``axis`` up to the next multiple of ``mult`` (no-op when
+    already aligned)."""
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)

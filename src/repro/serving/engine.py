@@ -44,7 +44,7 @@ from repro.serving.server import mesh_scope
 Params = dict[str, Any]
 
 __all__ = ["ServeConfig", "generate", "uncertainty_decode_step",
-           "serve_uncertain", "predict_packed"]
+           "serve_uncertain", "predict_packed", "predict_volume"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,26 +75,58 @@ def _expand_for_masks(x: jax.Array, n: int) -> jax.Array:
 
 
 def predict_packed(plan: plan_lib.PackedPlan, x: jax.Array, *,
-                   chunk: int | None = None, backend: str | None = None
+                   chunk: int | None = None, backend: str | None = None,
+                   fused: bool | None = None
                    ) -> tuple[jax.Array, jax.Array]:
     """Serve a compiled PackedPlan on a voxel batch: x [B, D] ->
     (mean [B, d_out], std [B, d_out]).
 
     The feed-forward analogue of :func:`serve_uncertain`: the engine consumes
-    the Phase-3 artifact directly — every PackedPair dispatches through
-    kernels/masked_ffn on the batch-level schedule — and reduces the mask
-    samples to predictive moments. ``chunk`` bounds the resident batch (a
-    volume is streamed in fixed-shape slices so the kernel retraces once);
-    ``backend`` forwards to :func:`repro.core.plan.execute`.
+    the Phase-3 artifact directly and reduces the mask samples to predictive
+    moments.
+
+    ``fused`` selects the executor: ``True`` runs the whole-plan megakernel
+    with the in-kernel moments epilogue (``plan.execute_fused(moments=True)``
+    — one launch per chunk, the ``[N, B, d_out]`` sample tensor is never
+    materialized); ``False`` runs the per-op path (one kernels/masked_ffn
+    launch per PackedPair, then ``uncertainty.predictive_moments``);
+    ``None`` (default) tries fused and falls back per-op when the plan has
+    no fused lowering or its moments-mode footprint trips the VMEM guard.
+    ``chunk`` bounds the resident batch: a volume is
+    streamed through the cached fixed-shape executor in ``chunk``-row
+    slices (the last slice zero-padded, pad rows dropped), so the kernel
+    traces once and each chunk is exactly one fused launch. ``backend``
+    forwards to the executor (None -> the process-wide probe).
     """
     b = x.shape[0]
-    if chunk is None or chunk >= b:
+    chunked = chunk is not None and chunk < b
+    if chunked:
+        pad = (-b) % chunk
+        xp = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]) \
+            if pad else x
+        xc = xp.reshape(-1, chunk, *x.shape[1:])
+
+    if fused is not False:
+        # Lowered once per call; the returned executor is the cached jitted
+        # runner, so every chunk is exactly one fused launch. The catch
+        # covers both no-fused-lowering and the moments-mode VMEM-residency
+        # guard (which fires from the first apply, at trace time).
+        try:
+            run = plan_lib.fused_executor(plan, moments=True,
+                                          backend=backend)
+            if not chunked:
+                return run(x)
+            moments = [run(xc[i]) for i in range(xc.shape[0])]
+            mean = jnp.concatenate([m for m, _ in moments])[:b]
+            std = jnp.concatenate([s for _, s in moments])[:b]
+            return mean, std
+        except plan_lib.FusedPlanUnsupported:
+            if fused:
+                raise
+
+    if not chunked:
         return unc_lib.predictive_moments(
             plan_lib.execute(plan, x, backend=backend))
-    pad = (-b) % chunk
-    xp = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]) \
-        if pad else x
-    xc = xp.reshape(-1, chunk, *x.shape[1:])
 
     def body(_, xb):
         return None, plan_lib.execute(plan, xb, backend=backend)
@@ -102,6 +134,29 @@ def predict_packed(plan: plan_lib.PackedPlan, x: jax.Array, *,
     _, ys = jax.lax.scan(body, None, xc)           # [B/chunk, N, chunk, Do]
     ys = jnp.moveaxis(ys, 1, 0).reshape(ys.shape[1], -1, ys.shape[-1])[:, :b]
     return unc_lib.predictive_moments(ys)
+
+
+def predict_volume(plan: plan_lib.PackedPlan, volume: jax.Array, *,
+                   chunk: int = 4096, backend: str | None = None,
+                   fused: bool | None = None
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Stream a clinical scan through the fused executor.
+
+    volume [..., D] (e.g. ``[X, Y, Z, n_bvalues]``) -> (mean, std), each
+    ``[..., d_out]``. The voxel grid is flattened, streamed through
+    :func:`predict_packed` in fixed ``chunk``-voxel slices (zero-padded to
+    the chunk shape so every slice reuses the one cached fused executor,
+    pad voxels unpadded on the way out), and reshaped back to the scan's
+    spatial layout — the ROADMAP's volume-serving follow-on at engine level.
+    """
+    if volume.ndim < 2:
+        raise ValueError(f"volume must be [..., D], got {volume.shape}")
+    lead = volume.shape[:-1]
+    x = volume.reshape(-1, volume.shape[-1])
+    mean, std = predict_packed(plan, x, chunk=chunk, backend=backend,
+                               fused=fused)
+    return (mean.reshape(lead + (mean.shape[-1],)),
+            std.reshape(lead + (std.shape[-1],)))
 
 
 def uncertainty_decode_step(model: Model, params: Params, caches,
