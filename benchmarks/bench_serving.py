@@ -1,6 +1,6 @@
 """Continuous batching vs looped one-shot serving on a Poisson trace.
 
-    PYTHONPATH=src python -m benchmarks.bench_serving [--smoke]
+    PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [--fused]
 
 Replays one Poisson arrival trace through two serving paths at matched
 uncertainty output (same N-mask posterior per token):
@@ -13,19 +13,35 @@ uncertainty output (same N-mask posterior per token):
     free slots while resident requests keep decoding, so every jitted decode
     step serves up to ``max_slots`` requests.
 
+The continuous-batching leg runs TWICE — once with the fused single-launch
+decode step (``core.plan.compile_decode_step``: KV gather, attention over
+the slot pool, the Bayesian FFN and the Welford posterior in one
+``kernels/fused_plan`` launch) and once with the per-op decode path — and
+reports tok/s, p50/p99 request latency and the modeled per-token HBM bytes
+of each decode executor. ``--fused`` gates on the fused leg: it must
+actually run fused (no silent fallback) and must emit tokens bitwise
+identical to the per-op decode.
+
 Arrivals are indexed in *decode steps* (a Poisson process sampled at step
 granularity) so the trace is hardware-independent and reproducible; wall
 time is measured for throughput. Correctness gate: per-request tokens must
-match exactly between the two paths and per-token uncertainties to fp32
-tolerance — the speedup is scheduling, not approximation.
+match exactly between the paths and per-token uncertainties to fp32
+tolerance — the speedup is scheduling + launch fusion, not approximation.
+
+Full (non-smoke) runs via ``benchmarks/run.py`` emit the canonical
+``BENCH_serving.json`` perf-trajectory artifact.
 """
 
 from __future__ import annotations
 
 import argparse
+import pathlib
 import time
 
 import numpy as np
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_serving.json"
 
 
 def make_trace(n_requests: int, mean_gap_steps: float, prompt_len: int,
@@ -76,9 +92,13 @@ def _run_server(model, params, scfg, arrivals, prompts, max_new: int):
 
 
 def run(smoke: bool = False, quiet: bool = False) -> dict:
+    import dataclasses
+
     import jax
 
+    from repro import compat
     from repro.configs import registry
+    from repro.core import plan as plan_lib
     from repro.models import build_model
 
     n_requests = 4 if smoke else 16
@@ -93,31 +113,52 @@ def run(smoke: bool = False, quiet: bool = False) -> dict:
     arrivals, prompts = make_trace(n_requests, mean_gap, prompt_len,
                                    cfg.vocab_size)
 
-    from repro.serving import ServerConfig
+    from repro.serving import ServerConfig, server as server_lib
     scfg = ServerConfig(max_slots=max_slots, max_queue=n_requests,
                         max_prompt_len=prompt_len, max_new_tokens=max_new)
+    scfg_perop = dataclasses.replace(scfg, fused=False)
 
-    # warmup: compile both paths outside the timed region
+    # warmup: compile all paths outside the timed region
     _run_baseline(model, params, prompts[:1], max_new)
     _run_server(model, params, scfg, arrivals[:1], prompts[:1], max_new)
+    _run_server(model, params, scfg_perop, arrivals[:1], prompts[:1],
+                max_new)
 
     base_outs, base_wall = _run_baseline(model, params, prompts, max_new)
     srv_outs, srv_wall, summary = _run_server(model, params, scfg, arrivals,
                                               prompts, max_new)
+    po_outs, po_wall, po_summary = _run_server(model, params, scfg_perop,
+                                               arrivals, prompts, max_new)
+    # checked AFTER the runs: the kernel guards fire at first call, so a
+    # build-time check would report a silently-fallen-back leg as fused
+    fused_active = server_lib.step_fns(cfg, fused=scfg.fused).fused_live()
 
     total_tokens = sum(len(t) for t, _ in srv_outs)
     tokens_match = all(np.array_equal(bt, st) for (bt, _), (st, _)
                        in zip(base_outs, srv_outs))
+    fused_tokens_match = all(np.array_equal(pt, st) for (pt, _), (st, _)
+                             in zip(po_outs, srv_outs))
     max_unc_delta = max(float(np.max(np.abs(bu - su))) for (_, bu), (_, su)
                         in zip(base_outs, srv_outs))
     base_tps = total_tokens / base_wall
     srv_tps = total_tokens / srv_wall
+    po_tps = total_tokens / po_wall
 
     # analytic pool traffic of one decode step (paper's weight-load metric
     # over the slot layout the server actually runs)
     from repro.core.scheduler import SlotSchedule
     tm = SlotSchedule(cfg.mask_samples, max_slots).decode_traffic(
         cfg.d_model, cfg.d_ff, cfg.d_model)
+
+    # modeled per-token HBM bytes of the two decode executors: one pool
+    # decode step serves max_slots tokens
+    spec = plan_lib.decode_fused_spec(cfg)
+    rows = cfg.mask_samples * max_slots
+    bytes_fused = plan_lib.decode_traffic(spec, rows, scfg.max_seq,
+                                          fused=True).total_bytes / max_slots
+    bytes_perop = plan_lib.decode_traffic(spec, rows, scfg.max_seq,
+                                          fused=False).total_bytes \
+        / max_slots
 
     if not quiet:
         mode = "smoke" if smoke else "full"
@@ -129,35 +170,112 @@ def run(smoke: bool = False, quiet: bool = False) -> dict:
               f"arithmetic intensity {tm.arithmetic_intensity:.2f}")
         print(f"looped one-shot serve_uncertain: "
               f"{base_tps:8.1f} tok/s  ({base_wall:.3f} s)")
-        print(f"continuous-batching server:      "
+        print(f"server, per-op decode:           "
+              f"{po_tps:8.1f} tok/s  ({po_wall:.3f} s)"
+              f"  -> {po_tps / base_tps:.2f}x")
+        print(f"server, fused decode:            "
               f"{srv_tps:8.1f} tok/s  ({srv_wall:.3f} s)"
-              f"  -> {srv_tps / base_tps:.2f}x")
-        print(f"tokens identical: {tokens_match}   "
+              f"  -> {srv_tps / base_tps:.2f}x"
+              f"  (active: {fused_active})")
+        print(f"modeled decode HBM bytes/token:  fused {bytes_fused:,.0f}  "
+              f"per-op {bytes_perop:,.0f}  "
+              f"-> {bytes_perop / bytes_fused:.2f}x fewer")
+        print(f"tokens identical: vs one-shot {tokens_match}, "
+              f"fused vs per-op {fused_tokens_match}   "
               f"max |d rel-unc|: {max_unc_delta:.2e}")
         print(summary.format())
     return {
         "baseline_tok_s": base_tps,
         "server_tok_s": srv_tps,
+        "server_perop_tok_s": po_tps,
         "speedup": srv_tps / base_tps,
+        "fused_vs_per_op": srv_tps / po_tps,
         "tokens_match": tokens_match,
+        "fused_tokens_match": fused_tokens_match,
+        "fused_active": fused_active,
         "max_unc_delta": max_unc_delta,
         "pool_weight_loads": tm.weight_loads,
+        "modeled_bytes_per_token_fused": bytes_fused,
+        "modeled_bytes_per_token_perop": bytes_perop,
         "summary": summary,
+        "perop_summary": po_summary,
+        "provenance": {
+            **compat.version_summary(),
+            "arch": cfg.arch_id, "n_layers": cfg.n_layers,
+            "d_model": cfg.d_model, "d_ff": cfg.d_ff,
+            "vocab": cfg.vocab_size, "n_masks": cfg.mask_samples,
+            "max_slots": max_slots, "max_seq": scfg.max_seq,
+            "n_requests": n_requests, "prompt_len": prompt_len,
+            "max_new_tokens": max_new, "mode": "smoke" if smoke else "full",
+        },
     }
+
+
+def write_bench_json(out: dict, path: pathlib.Path = BENCH_JSON) -> dict:
+    """Emit the canonical BENCH_serving.json perf-trajectory artifact:
+    fused vs per-op decode tok/s, request-latency percentiles and modeled
+    per-token HBM bytes, stamped with backend + shape provenance so future
+    PRs compare like with like."""
+    import json
+
+    def pcts(s):
+        return {"p50_ms": s.latency_p50_s * 1e3,
+                "p99_ms": s.latency_p99_s * 1e3,
+                "ttft_p50_ms": s.ttft_p50_s * 1e3}
+
+    payload = {
+        "bench": "bench_serving",
+        "provenance": out["provenance"],
+        "tok_s": {
+            "one_shot_loop": out["baseline_tok_s"],
+            "server_per_op_decode": out["server_perop_tok_s"],
+            "server_fused_decode": out["server_tok_s"],
+        },
+        "request_latency": {
+            "server_per_op_decode": pcts(out["perop_summary"]),
+            "server_fused_decode": pcts(out["summary"]),
+        },
+        "modeled_decode_hbm_bytes_per_token": {
+            "per_op": out["modeled_bytes_per_token_perop"],
+            "fused": out["modeled_bytes_per_token_fused"],
+            "reduction": out["modeled_bytes_per_token_perop"]
+            / out["modeled_bytes_per_token_fused"],
+        },
+        "fused_decode_active": out["fused_active"],
+        "tokens_identical_fused_vs_per_op": out["fused_tokens_match"],
+    }
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return payload
 
 
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace for CI (tier-1-safe, ~seconds)")
+    ap.add_argument("--fused", action="store_true",
+                    help="gate on the fused decode leg: it must run fused "
+                         "(no silent per-op fallback) and match the per-op "
+                         "tokens bitwise")
     args = ap.parse_args()
     res = run(smoke=args.smoke)
     if not res["tokens_match"]:
         print("ERROR: server tokens diverged from one-shot serving")
         return 1
+    if not res["fused_tokens_match"]:
+        print("ERROR: fused-decode server tokens diverged from the per-op "
+              "decode server")
+        return 1
     if res["max_unc_delta"] > 1e-4:
         print(f"ERROR: per-token uncertainty diverged beyond fp32 tolerance "
               f"({res['max_unc_delta']:.2e} > 1e-4)")
+        return 1
+    if args.fused and not res["fused_active"]:
+        print("ERROR: --fused requested but the fused decode step was not "
+              "selected (FusedPlanUnsupported fallback)")
+        return 1
+    if args.fused and res["modeled_bytes_per_token_fused"] >= \
+            res["modeled_bytes_per_token_perop"]:
+        print("ERROR: fused decode step models no HBM-byte reduction")
         return 1
     return 0
 

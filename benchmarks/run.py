@@ -98,8 +98,23 @@ def main() -> None:
     srv = bench_serving.run(smoke=args.smoke)
     csv.append(("serving_continuous_batching_speedup", srv["speedup"],
                 "server tok/s over looped serve_uncertain, Poisson trace"))
+    csv.append(("serving_fused_decode_speedup", srv["fused_vs_per_op"],
+                "fused single-launch decode vs per-op decode, server tok/s"))
+    csv.append(("serving_fused_decode_bytes_reduction",
+                srv["modeled_bytes_per_token_perop"]
+                / srv["modeled_bytes_per_token_fused"],
+                "modeled per-token decode HBM bytes, per-op / fused"))
     csv.append(("serving_uncertainty_max_delta", srv["max_unc_delta"],
                 "per-token rel-unc |server - one-shot|"))
+    # canonical serving perf-trajectory artifact (fused vs per-op decode,
+    # with backend + shape provenance). Smoke runs must not clobber the
+    # committed full-size numbers.
+    if args.smoke:
+        print(f"[smoke] skipping {bench_serving.BENCH_JSON} "
+              f"(full-size runs only)")
+    else:
+        bench_serving.write_bench_json(srv)
+        print(f"wrote {bench_serving.BENCH_JSON}")
 
     print()
     print("=" * 72)

@@ -43,3 +43,10 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_ivim_packed
 # diverge.
 REPRO_KERNEL_BACKEND=pallas-interpret \
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_ivim_packed --smoke --fused
+
+# Fused-decode smoke: the serving decode step as ONE kernels/fused_plan
+# launch under the interpreter — the bench exits nonzero if the fused leg
+# silently fell back per-op, if fused and per-op decode tokens diverge, or
+# if the fused step models no per-token HBM-byte reduction.
+REPRO_KERNEL_BACKEND=pallas-interpret \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_serving --smoke --fused

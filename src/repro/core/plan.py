@@ -74,6 +74,8 @@ __all__ = [
     "compile_masked_ffn", "pack_ffn_leaves", "ffn_leaves_apply", "execute",
     "lower_fused", "execute_fused", "fused_executor",
     "FusedPlanUnsupported", "fused_trace_counts",
+    "lower_fused_decode", "compile_decode_step", "decode_fused_spec",
+    "decode_traffic", "decode_modeled_latency",
 ]
 
 #: The one activation-name table for the mask pipeline and the model specs
@@ -770,3 +772,317 @@ def execute_fused(plan: PackedPlan, x: jax.Array, *, moments: bool = False,
     """
     return fused_executor(plan, moments=moments, backend=backend,
                           block_b=block_b)(x)
+
+
+# ---------------------------------------------------------------------------
+# fused serving-decode step (kernels/fused_plan decode megakernel)
+# ---------------------------------------------------------------------------
+#
+# The decode-side twin of lower_fused/execute_fused: one serving decode step
+# of the whole mask-expanded slot pool — KV gather -> attention over the
+# slot-pool cache -> (packed) Bayesian FFN -> in-kernel Welford posterior —
+# lowered onto the same FusedStep vocabulary and executed as ONE launch.
+# serving/server.step_fns routes its decode hot loop through
+# compile_decode_step, with the per-op transformer.decode_step path as the
+# FusedPlanUnsupported fallback.
+
+
+def lower_fused_decode(cfg, *, expand_masks: bool = True
+                       ) -> fused_ref.FusedDecodeSpec:
+    """Lower a ModelConfig's serving decode step to the fused decode IR.
+
+    The chain is the unrolled attention-block stack
+    ``(norm, attn, norm, ffn) × L + (final norm, lm-head dense)`` — scan
+    segments flatten rep-major, matching ``_decode_flat_params``. Raises
+    :class:`FusedPlanUnsupported` for configs with no fused decode form
+    (non-causal, M-RoPE, or any block kind other than attn/local_attn —
+    MoE routing and the recurrent families keep the per-op path).
+    """
+    if not cfg.causal:
+        raise FusedPlanUnsupported("encoder-only config has no decode step")
+    if cfg.m_rope_sections:
+        raise FusedPlanUnsupported("M-RoPE decode has no fused lowering")
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    rot = int(dh * cfg.rope_pct)
+    rot -= rot % 2
+    bayes = cfg.bayesian and expand_masks
+    n = cfg.mask_samples if bayes else 1
+    packed = cfg.bayesian and cfg.packed_ffn_serving
+    gated = cfg.activation in ("silu", "gelu")
+    ln_bias = cfg.norm == "layernorm"
+    if packed:
+        from repro.core import masks as masks_lib
+        d_hidden = masks_lib.keep_count(cfg.d_ff, cfg.mask_samples,
+                                        cfg.mask_scale)
+    else:
+        d_hidden = cfg.d_ff
+    steps: list[fused_ref.FusedStep] = []
+    for seg in cfg.segments():
+        for kind in seg.pattern:
+            if kind not in ("attn", "local_attn"):
+                raise FusedPlanUnsupported(
+                    f"block kind {kind!r} has no fused decode lowering")
+        for _ in range(seg.reps):
+            for kind in seg.pattern:
+                steps.append(fused_ref.FusedStep(
+                    "norm", norm=cfg.norm, shared_bias=ln_bias,
+                    d_in=d, d_out=d))
+                steps.append(fused_ref.FusedStep(
+                    "attn", d_in=d, d_out=d, n_heads=cfg.n_heads,
+                    n_kv_heads=cfg.n_kv_heads, head_dim=dh, rot_dim=rot,
+                    qkv_bias=cfg.qkv_bias,
+                    window=cfg.local_window if kind == "local_attn" else 0))
+                steps.append(fused_ref.FusedStep(
+                    "norm", norm=cfg.norm, shared_bias=ln_bias,
+                    d_in=d, d_out=d))
+                steps.append(fused_ref.FusedStep(
+                    "ffn", activation=cfg.activation, gated=gated,
+                    per_sample=packed, masked=cfg.bayesian and not packed,
+                    ffn_bias=not gated and not packed, d_hidden=d_hidden,
+                    d_in=d, d_out=d))
+    steps.append(fused_ref.FusedStep("norm", norm=cfg.norm,
+                                     shared_bias=ln_bias, d_in=d, d_out=d))
+    steps.append(fused_ref.FusedStep("dense", d_in=d, d_out=cfg.vocab_size))
+    return fused_ref.FusedDecodeSpec(steps=tuple(steps), n_samples=n,
+                                     d_model=d, vocab=cfg.vocab_size)
+
+
+def _decode_mask_ids(cfg, rows: int, expand_masks: bool) -> jax.Array:
+    """Per-row mask assignment of the decode pool — the same ids the per-op
+    path uses (mask-major groups when expanded, the Masksembles batch-group
+    default otherwise)."""
+    from repro.core import masksembles
+    n = cfg.mask_samples
+    if expand_masks:
+        return jnp.repeat(jnp.arange(n), rows // n)
+    return masksembles.mask_ids_for_batch(rows, n)
+
+
+def _decode_flat_params(spec: fused_ref.FusedDecodeSpec, cfg, params: Params,
+                        rows: int, expand_masks: bool
+                        ) -> tuple[jax.Array, ...]:
+    """Flatten the transformer param pytree into ``decode_param_slots``
+    order (scan-stacked leaves sliced per rep; the Bayesian mask matrix
+    pre-gathered per row)."""
+    flat: list[jax.Array] = []
+
+    def push_norm(p):
+        flat.append(p["scale"])
+        if "bias" in p:
+            flat.append(p["bias"])
+
+    for si, seg in enumerate(cfg.segments()):
+        seg_params = params["segments"][si]
+        for r in range(seg.reps):
+            for bi in range(len(seg.pattern)):
+                block = jax.tree.map(lambda a, r=r: a[r],
+                                     seg_params[f"b{bi}"])
+                push_norm(block["norm1"])
+                at = block["attn"]
+                for w in ("wq", "wk", "wv"):
+                    flat.append(at[w]["w"])
+                    if "b" in at[w]:
+                        flat.append(at[w]["b"])
+                flat.append(at["wo"]["w"])
+                push_norm(block["norm2"])
+                ffn = block["ffn"]
+                if "wdp" in ffn:                    # packed serving leaves
+                    if "wgp" in ffn:
+                        flat.append(ffn["wgp"])
+                    flat += [ffn["wup"], ffn["wdp"]]
+                else:
+                    if "wg" in ffn:
+                        flat.append(ffn["wg"]["w"])
+                    flat.append(ffn["wu"]["w"])
+                    if "b" in ffn["wu"]:
+                        flat.append(ffn["wu"]["b"])
+                    flat.append(ffn["wd"]["w"])
+                    if "b" in ffn["wd"]:
+                        flat.append(ffn["wd"]["b"])
+                    if "masks" in ffn:
+                        ids = _decode_mask_ids(cfg, rows, expand_masks)
+                        flat.append(ffn["masks"][ids])
+    push_norm(params["final_norm"])
+    emb = params["embed"]
+    flat.append(emb["unembed"]["w"] if "unembed" in emb
+                else emb["embed"].T)
+    want = len(fused_ref.decode_param_slots(spec))
+    if len(flat) != want:
+        raise FusedPlanUnsupported(
+            f"param pytree does not match the lowered decode spec "
+            f"({len(flat)} arrays vs {want} slots)")
+    return tuple(flat)
+
+
+def _decode_flat_caches(cfg, caches) -> tuple[jax.Array, ...]:
+    """Flatten pooled KV caches to ``(k, v, kpos)`` per 'attn' step, in the
+    lowering's rep-major step order."""
+    flat: list[jax.Array] = []
+    for si, seg in enumerate(cfg.segments()):
+        for r in range(seg.reps):
+            for bi in range(len(seg.pattern)):
+                c = caches[si][f"b{bi}"]
+                flat += [c["k"][r], c["v"][r], c["kpos"][r]]
+    return tuple(flat)
+
+
+def _decode_commit_caches(cfg, caches, knew: jax.Array, vnew: jax.Array,
+                          pos: jax.Array):
+    """Commit the kernel's fresh per-layer k/v into the pooled caches —
+    exactly ``layers.kv_cache_update`` per layer (same slot formula, same
+    written values), so the fused path's caches stay bitwise consistent
+    with the per-op decode path's."""
+    from repro.models import layers
+    ai = 0
+    out = []
+    for si, seg in enumerate(cfg.segments()):
+        per_rep = []
+        for r in range(seg.reps):
+            rep: Params = {}
+            for bi, kind in enumerate(seg.pattern):
+                c = caches[si][f"b{bi}"]
+                cur = {"k": c["k"][r], "v": c["v"][r], "kpos": c["kpos"][r]}
+                # cast to the cache dtype here (the xla ref tier emits f32):
+                # a mixed-dtype scatter is deprecated and will hard-error
+                rep[f"b{bi}"] = layers.kv_cache_update(
+                    cur, knew[ai][:, :, None, :].astype(c["k"].dtype),
+                    vnew[ai][:, :, None, :].astype(c["v"].dtype),
+                    pos, cfg.local_window if kind == "local_attn" else 0)
+                ai += 1
+            per_rep.append(rep)
+        out.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep))
+    return out
+
+
+@functools.lru_cache(maxsize=64)
+def _decode_runner(cfg, expand_masks: bool, backend: str | None):
+    """One jitted decode-step executor per (config, expansion, backend) —
+    the decode analogue of :func:`_fused_runner`: the returned callable is
+    stable, so jit's shape cache applies and the serving hot loop never
+    retraces (``fused_trace_counts[(spec, backend, "decode")]`` observes
+    trace count)."""
+    spec = lower_fused_decode(cfg, expand_masks=expand_masks)
+    rot = next(s.rot_dim for s in spec.steps if s.kind == "attn")
+    donate = (1,) if jax.default_backend() != "cpu" else ()
+
+    def run(params, caches, tokens, pos):
+        fused_trace_counts[(spec, backend, "decode")] += 1
+        from repro.models import layers
+        rows = tokens.shape[0]
+        p = jnp.asarray(pos, jnp.int32)
+        pos_r = jnp.broadcast_to(p, (rows,)) if p.ndim == 0 else p
+        x = layers.embed_tokens(params["embed"], tokens)[:, 0]
+        cos, sin = layers.rope_cos_sin(pos_r, rot, cfg.rope_theta)
+        flat = _decode_flat_params(spec, cfg, params, rows, expand_masks)
+        fc = _decode_flat_caches(cfg, caches)
+        if backend == "xla":
+            out = fused_ref.fused_decode_ref(spec, x, flat, fc, pos_r, cos,
+                                             sin)
+        else:
+            from repro.kernels.fused_plan import ops as fp_ops
+            out = fp_ops.fused_decode(spec, x, flat, fc, pos_r, cos, sin,
+                                      interpret=_BACKEND_INTERPRET[backend])
+        mean, rel, knews, vnews = out
+        new_caches = _decode_commit_caches(cfg, caches, knews, vnews, pos_r)
+        return mean, rel, new_caches
+
+    return jax.jit(run, donate_argnums=donate), spec
+
+
+def compile_decode_step(cfg, *, expand_masks: bool = True,
+                        backend: str | None = None) -> Callable:
+    """Lower once, decode many: the fused serving decode step of ``cfg`` as
+    a cached jitted executor ``(params, caches, tokens [R,1], pos) ->
+    (mean_logp [b, V], rel_unc [b], new_caches)``.
+
+    ``pos`` is a scalar or per-row ``[R]`` vector (the continuous-batching
+    form); rows are mask-major (``expand_masks=True``: row ``r`` is mask
+    ``r // b``). Raises :class:`FusedPlanUnsupported` immediately when the
+    config has no fused decode lowering; the VMEM-residency / lane-alignment
+    guards of the kernel tier fire later, from the first call (trace time) —
+    callers that want the per-op fallback must catch around that first call
+    too (``serving.server.step_fns`` does).
+    """
+    if backend not in (None, "xla", "pallas-interpret", "pallas-tpu"):
+        raise ValueError(f"unknown backend {backend!r}")
+    return _decode_runner(cfg, bool(expand_masks), backend)[0]
+
+
+def decode_fused_spec(cfg, *, expand_masks: bool = True
+                      ) -> fused_ref.FusedDecodeSpec:
+    """Static shape-key of the fused decode executor (trace-counter key)."""
+    return lower_fused_decode(cfg, expand_masks=expand_masks)
+
+
+def decode_traffic(spec: fused_ref.FusedDecodeSpec, rows: int, max_seq: int,
+                   bytes_per_el: int = 2, *, fused: bool = True
+                   ) -> sched_lib.TrafficModel:
+    """Modeled HBM traffic of ONE pool decode step, priced from the spec.
+
+    Weights and KV-cache rows cross HBM once per *launch* in either path
+    (``weight_bytes`` counts both); the fused/per-op difference is (a) the
+    inter-stage activations — per-op round-trips the ``[R, D]`` residual at
+    every sub-layer boundary and materializes the ``[R, V]`` logits twice
+    (lm-head write + posterior read), fused keeps them VMEM-resident and
+    emits only the already-reduced ``(mean [b, V], rel [b])`` — and (b)
+    launch count: ``weight_loads`` holds launches per token (per-op:
+    ``2·L + 2`` — attention and FFN per layer, lm head, posterior; fused:
+    1), each priced at ``kernel_fill_us`` by
+    :func:`decode_modeled_latency`.
+    """
+    d, v, n = spec.d_model, spec.vocab, spec.n_samples
+    b = rows // n
+    w_el = flops = cache_el = 0
+    layers_l = 0
+    for st in spec.steps:
+        if st.kind == "norm":
+            w_el += d * (2 if st.shared_bias else 1)
+        elif st.kind == "attn":
+            hh, hkv, dh = st.n_heads, st.n_kv_heads, st.head_dim
+            smax = min(st.window, max_seq) if st.window else max_seq
+            proj = d * hh * dh + 2 * d * hkv * dh + hh * dh * d
+            if st.qkv_bias:
+                proj += hh * dh + 2 * hkv * dh
+            w_el += proj
+            cache_el += rows * hkv * smax * dh * 2 + rows * smax \
+                + rows * hkv * dh * 2 + rows
+            flops += 2 * rows * proj + 4 * rows * hh * dh * (smax + 1)
+            layers_l += 1
+        elif st.kind == "ffn":
+            mats = 3 if st.gated else 2
+            if st.per_sample:
+                w_el += n * mats * d * st.d_hidden
+                flops += 2 * rows * mats * d * st.d_hidden
+            else:
+                w_el += mats * d * st.d_hidden \
+                    + (st.d_hidden + d if st.ffn_bias else 0)
+                if st.masked:
+                    w_el += n * st.d_hidden
+                flops += 2 * rows * mats * d * st.d_hidden
+        elif st.kind == "dense":
+            w_el += st.d_in * st.d_out + (st.d_out if st.shared_bias else 0)
+            flops += 2 * rows * st.d_in * st.d_out
+    if fused:
+        act_el = rows * d + b * v + b
+        launches = 1
+    else:
+        act_el = layers_l * 4 * rows * d + rows * d + 2 * rows * v \
+            + b * v + b
+        launches = 2 * layers_l + 2
+    return sched_lib.TrafficModel(
+        weight_bytes=(w_el + cache_el) * bytes_per_el,
+        act_bytes=act_el * bytes_per_el, flops=flops, weight_loads=launches)
+
+
+def decode_modeled_latency(spec: fused_ref.FusedDecodeSpec, rows: int,
+                           max_seq: int, *,
+                           tpu: latency_model.TpuSpec = latency_model.V5E,
+                           bytes_per_el: int = 2,
+                           fused: bool = True) -> float:
+    """Eq.-2-analogue latency of one pool decode step: roofline over the
+    decode traffic plus one ``kernel_fill_us`` per launch — the launch term
+    is what dominates the per-op path at pool-sized batches, which is the
+    whole point of the fused decode step."""
+    tm = decode_traffic(spec, rows, max_seq, bytes_per_el, fused=fused)
+    return max(tm.flops / tpu.peak_flops_bf16, tm.total_bytes / tpu.hbm_bw) \
+        + tm.weight_loads * tpu.kernel_fill_us * 1e-6

@@ -46,7 +46,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.fused_plan import ref as _spec_lib
 
-__all__ = ["fused_plan_pallas"]
+__all__ = ["fused_plan_pallas", "fused_decode_pallas"]
 
 
 def _dense(h, w, b, bp, activation):
@@ -221,3 +221,105 @@ def fused_plan_pallas(x: jax.Array, params: tuple[jax.Array, ...], *,
         scratch_shapes=scratch + [pltpu.VMEM((block_b, wmax), jnp.float32)],
         interpret=interpret,
     )(x, *params)
+
+
+# ---------------------------------------------------------------------------
+# fused serving-decode megakernel (FusedDecodeSpec)
+# ---------------------------------------------------------------------------
+#
+# One decode step of the whole mask-expanded slot pool in ONE pallas_call:
+# the per-op serving path launches KV gather + attention, the (packed)
+# Bayesian FFN and the posterior reduction as separate kernels per layer per
+# token, so every inter-stage activation [R, D] and the [R, V] log-prob
+# tensor round-trip HBM at exactly the batch sizes where launch overhead
+# dominates. Here the pool is small by construction (R = n_masks x
+# max_slots rows, one token each), so the whole working set — every
+# layer's weights, every layer's KV cache rows, and the running residual —
+# fits VMEM at once: the kernel is a single program (no grid) over
+# whole-array VMEM blocks, the decode twin of the moments-mode
+# weights-resident regime. The chain math (norms, RoPE'd KV-gather
+# attention with the fresh k/v appended, gated/packed FFN, in-kernel
+# Welford posterior over the mask axis) is shared with the oracle tier by
+# construction: the kernel reads its refs into VMEM values and runs the
+# exact `ref.py` sub-layer contract, so xla/interpret tiers cannot drift.
+# Fresh per-layer k/v are emitted as outputs and committed to the cache by
+# the caller (one XLA scatter per layer outside the launch) — the kernel
+# itself never mutates the pool, which keeps every ref read-only and the
+# launch trivially idempotent. Lane-alignment gating lives in ops.py.
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "interpret"))
+def fused_decode_pallas(x: jax.Array, params: tuple[jax.Array, ...],
+                        caches: tuple[jax.Array, ...], pos: jax.Array,
+                        cos: jax.Array, sin: jax.Array, *,
+                        spec: _spec_lib.FusedDecodeSpec,
+                        interpret: bool = False):
+    """x [R, d_model], params per ``ref.decode_param_slots`` order, caches
+    flattened ``(k, v, kpos)`` per 'attn' step, pos [R] i32, cos/sin
+    [R, rot/2] -> (mean_logp [b, V], rel_unc [b], k_new, v_new) with
+    k_new/v_new [n_attn, R, hkv, dh]."""
+    r = x.shape[0]
+    b = r // spec.n_samples
+    if b * spec.n_samples != r:
+        raise ValueError(f"rows {r} not divisible by n_samples "
+                         f"{spec.n_samples}")
+    slots = _spec_lib.decode_param_slots(spec)
+    if len(caches) != 3 * spec.n_attn:
+        raise ValueError(f"expected {3 * spec.n_attn} cache arrays, "
+                         f"got {len(caches)}")
+    a = spec.n_attn
+    attn_step = next(s for s in spec.steps if s.kind == "attn")
+    hkv, dh = attn_step.n_kv_heads, attn_step.head_dim
+
+    def kernel(x_ref, pos_ref, cos_ref, sin_ref, *refs):
+        p_refs = dict(zip(slots, refs[: len(slots)]))
+        c_refs = refs[len(slots): len(slots) + 3 * a]
+        mean_ref, rel_ref, knew_ref, vnew_ref = refs[len(slots) + 3 * a:]
+        pos_v = pos_ref[...]
+        cos_v, sin_v = cos_ref[...], sin_ref[...]
+        resid = x_ref[...].astype(jnp.float32)
+        h = resid
+        ai = 0
+        for i, st in enumerate(spec.steps):
+            p = {name: p_refs[(j, name)][...]
+                 for (j, name) in slots if j == i}
+            if st.kind == "norm":
+                h = _spec_lib.norm_fn(resid, p["scale"], p.get("bias"),
+                                      st.norm)
+            elif st.kind == "attn":
+                cache = tuple(cr[...] for cr in c_refs[3 * ai: 3 * ai + 3])
+                y, kn, vn = _spec_lib.decode_attn_ref(st, h, p, cache,
+                                                      pos_v, cos_v, sin_v)
+                resid = resid + y
+                h = resid
+                knew_ref[ai] = kn.astype(knew_ref.dtype)
+                vnew_ref[ai] = vn.astype(vnew_ref.dtype)
+                ai += 1
+            elif st.kind == "ffn":
+                resid = resid + _spec_lib.decode_ffn_ref(st, h, p)
+                h = resid
+            elif st.kind == "dense":
+                h = h @ p["w"]
+                if st.shared_bias:
+                    h = h + p["b"]
+                if st.activation:
+                    h = _spec_lib.act_fn(st.activation)(h)
+            else:                       # 'act'
+                h = _spec_lib.act_fn(st.activation)(h)
+        logp = jax.nn.log_softmax(h.astype(jnp.float32), -1)
+        mean, rel = _spec_lib.welford_posterior(logp, spec.n_samples)
+        mean_ref[...] = mean
+        rel_ref[...] = rel[:, None]
+
+    # single program, whole-array blocks (default specs): the entire pool
+    # working set is VMEM-resident for the launch — no grid, no revisits
+    out = pl.pallas_call(
+        kernel,
+        out_shape=(jax.ShapeDtypeStruct((b, spec.vocab), jnp.float32),
+                   jax.ShapeDtypeStruct((b, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((a, r, hkv, dh), x.dtype),
+                   jax.ShapeDtypeStruct((a, r, hkv, dh), x.dtype)),
+        interpret=interpret,
+    )(x, pos, cos, sin, *params, *caches)
+    mean, rel, knew, vnew = out
+    return mean, rel[:, 0], knew, vnew

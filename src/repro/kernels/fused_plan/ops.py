@@ -10,12 +10,14 @@ guard for the weights-resident moments mode.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 
 from repro import compat
 from repro.kernels.fused_plan import ref as _ref
-from repro.kernels.fused_plan.ref import (FusedPlanUnsupported, FusedSpec,
+from repro.kernels.fused_plan.ref import (FusedDecodeSpec,
+                                          FusedPlanUnsupported, FusedSpec,
                                           param_slots)
 from repro.kernels.pad import pad_to as _pad_to
 
@@ -24,7 +26,8 @@ from repro.kernels.pad import pad_to as _pad_to
 _kernel = compat.import_pallas_kernel("repro.kernels.fused_plan.kernel")
 
 __all__ = ["fused_plan", "fused_vmem_bytes", "FusedPlanUnsupported",
-           "VMEM_MOMENTS_LIMIT", "KERNEL_BACKEND"]
+           "VMEM_MOMENTS_LIMIT", "KERNEL_BACKEND",
+           "fused_decode", "fused_decode_vmem_bytes"]
 
 #: Resident-footprint cap for the moments mode (all packed weights + scratch
 #: must sit in VMEM at once — the paper's on-chip-weights regime). Plans past
@@ -117,6 +120,69 @@ def fused_plan(spec: FusedSpec, x: jax.Array, params: tuple[jax.Array, ...],
     return mean, std
 
 
+# ---------------------------------------------------------------------------
+# fused serving-decode step
+# ---------------------------------------------------------------------------
+
+
+def fused_decode_vmem_bytes(spec: FusedDecodeSpec,
+                            arrays: tuple[jax.Array, ...],
+                            bytes_per_el: int = 4) -> int:
+    """Modeled resident footprint of the single-program decode kernel: every
+    input/output array plus a 3-tile working-state slack (residual, normed
+    hidden, widest sub-layer intermediate) — all f32 in-kernel."""
+    rows = arrays[0].shape[0]
+    wmax = max((st.d_hidden for st in spec.steps if st.kind == "ffn"),
+               default=spec.d_model)
+    wmax = max(wmax, spec.vocab, spec.d_model)
+    slack = 3 * rows * wmax
+    total = sum(math.prod(a.shape) for a in arrays) + slack
+    return total * bytes_per_el
+
+
+def _lane_aligned(*arrays: jax.Array) -> bool:
+    return all(a.ndim >= 2 and a.shape[-1] % 128 == 0 for a in arrays)
+
+
+def fused_decode(spec: FusedDecodeSpec, x: jax.Array,
+                 params: tuple[jax.Array, ...],
+                 caches: tuple[jax.Array, ...], pos: jax.Array,
+                 cos: jax.Array, sin: jax.Array, *,
+                 interpret: bool | None = None):
+    """Execute one lowered serving decode step in one kernel launch.
+
+    x [R, d_model] (embedded pool tokens), params per
+    ``ref.decode_param_slots``, caches flattened ``(k, v, kpos)`` per 'attn'
+    step, pos [R], cos/sin [R, rot/2] ->
+    ``(mean_logp [b, V], rel_unc [b], k_new, v_new)``. interpret=None ->
+    auto (True off-TPU). Raises :class:`FusedPlanUnsupported` when the
+    resident footprint exceeds the VMEM guard, or on a compiled-TPU tier
+    with lane-unaligned serving shapes (the interpreter tier has no
+    alignment constraint) — callers fall back to the per-op decode path.
+    """
+    if compat.kernel_backend_for(_kernel) == "xla":
+        return _ref.fused_decode_ref(spec, x, params, caches, pos, cos, sin)
+    if interpret is None:
+        interpret = compat.pallas_interpret_default()
+    arrays = (x,) + tuple(params) + tuple(caches)
+    need = fused_decode_vmem_bytes(spec, arrays)
+    if need > VMEM_MOMENTS_LIMIT:
+        raise FusedPlanUnsupported(
+            f"fused decode step needs {need} resident bytes "
+            f"(> {VMEM_MOMENTS_LIMIT}); use the per-op decode path")
+    if not interpret and not _lane_aligned(x, *caches):
+        # The compiled Mosaic tier wants 128-lane shapes; serving decode
+        # pools are validated on the interpreter tier, so a lane-unaligned
+        # pool on real TPU degrades to the per-op path instead of crashing.
+        raise FusedPlanUnsupported(
+            "fused decode kernel requires 128-lane-aligned shapes on the "
+            "compiled pallas-tpu tier; use the per-op decode path")
+    return _kernel.fused_decode_pallas(x, tuple(params), tuple(caches), pos,
+                                       cos, sin, spec=spec,
+                                       interpret=interpret)
+
+
 # Re-export the oracle pair so callers can A/B without importing ref directly.
 fused_plan_ref = _ref.fused_plan_ref
 fused_moments_ref = _ref.fused_moments_ref
+fused_decode_ref = _ref.fused_decode_ref

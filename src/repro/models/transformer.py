@@ -263,6 +263,11 @@ def _attention_sublayer(cfg: ModelConfig, p: Params, x: jax.Array, rope,
                                        new_cache["kpos"], pos)
     else:
         s = x.shape[1]
+        # s == window takes the full path below; attention_banded's own
+        # s <= window fallback would compute the identical window-masked
+        # full attention, so this boundary and the branch-free cache build
+        # beneath agree — pinned by the prefill→decode window-boundary
+        # tests in test_models_smoke.py.
         if window and s > window:
             attn = layers.attention_banded(q, k, v, window=window,
                                            unroll=cfg.analysis_unroll)
@@ -276,21 +281,31 @@ def _attention_sublayer(cfg: ModelConfig, p: Params, x: jax.Array, rope,
                                          window=window,
                                          scores_f32=cfg.attn_scores_f32)
         if mode == "prefill":
-            if window and s >= window:
-                # rolling cache invariant: slot = pos % window
-                roll = s % window
-                ks = jnp.roll(k[:, :, -window:], roll, axis=2)
-                vs = jnp.roll(v[:, :, -window:], roll, axis=2)
-                kpos = jnp.roll(jnp.arange(s - window, s, dtype=jnp.int32),
-                                roll)
-            else:
-                smax = cache["k"].shape[2] if cache is not None else s
-                pad = smax - s
-                ks = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
-                vs = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
-                kpos = jnp.concatenate([jnp.arange(s, dtype=jnp.int32),
-                                        jnp.full((pad,), -1, jnp.int32)])
-            kpos = jnp.broadcast_to(kpos[None], (x.shape[0],) + kpos.shape)
+            # Branch-free cache build: the last min(s, smax) positions land
+            # at slot = pos % smax — kv_cache_update's decode invariant
+            # (smax == window for local attention), so the s < window,
+            # s == window and s > window prompts all hand decode the same
+            # layout. This replaces a linear-pad / rolling branch pair that
+            # split at s >= window while the attention path split at
+            # s > window — the two boundaries now cannot drift apart.
+            smax = cache["k"].shape[2] if cache is not None else s
+            if s > smax and (not window or smax < window):
+                # Truncating to the last smax positions is only legitimate
+                # when every dropped position is already outside the
+                # attention window (the rolling local cache); for a global
+                # cache — or a window the cache cannot hold — it would
+                # silently amputate attendable context.
+                raise ValueError(
+                    f"prompt length {s} exceeds cache capacity {smax}; "
+                    f"raise max_seq")
+            keep = min(s, smax)
+            kept_pos = jnp.arange(s - keep, s, dtype=jnp.int32)
+            slots = kept_pos % smax
+            shp = (x.shape[0], k.shape[1], smax, k.shape[-1])
+            ks = jnp.zeros(shp, k.dtype).at[:, :, slots].set(k[:, :, -keep:])
+            vs = jnp.zeros(shp, v.dtype).at[:, :, slots].set(v[:, :, -keep:])
+            kpos = jnp.full((smax,), -1, jnp.int32).at[slots].set(kept_pos)
+            kpos = jnp.broadcast_to(kpos[None], (x.shape[0], smax))
             new_cache = {"k": ks, "v": vs, "kpos": kpos}
     return x + layers.dense(p["attn"]["wo"], layers._merge_heads(attn)), \
         new_cache

@@ -52,13 +52,16 @@ class ServeConfig:
     max_new_tokens: int = 16
     greedy: bool = True
     uncertainty_threshold: float = 0.5   # flag tokens above this rel-unc
+    fused: bool | None = None            # decode executor (True = require
+                                         # fused, False = per-op, None =
+                                         # auto with per-op fallback)
 
 
 def generate(model: Model, params: Params, tokens: jax.Array,
              cfg: ServeConfig = ServeConfig(), *, mesh=None) -> jax.Array:
     """Greedy generation: tokens [B, S] -> [B, S + max_new_tokens]."""
     b, s = tokens.shape
-    fns = server_lib.step_fns(model, expand_masks=False)
+    fns = server_lib.step_fns(model, expand_masks=False, fused=cfg.fused)
     with mesh_scope(mesh):
         mean, _, cache = fns.prefill(params, tokens,
                                      max_seq=s + cfg.max_new_tokens)
@@ -196,7 +199,7 @@ def serve_uncertain(model: Model, params: Params, tokens: jax.Array,
         raise ValueError("serve_uncertain requires mask_samples > 0")
     n = model.cfg.mask_samples
     b, s = tokens.shape
-    fns = server_lib.step_fns(model)
+    fns = server_lib.step_fns(model, fused=cfg.fused)
     xt = _expand_for_masks(tokens, n)                    # [N*B, S]
     outs, uncs = [], []
     with mesh_scope(mesh):

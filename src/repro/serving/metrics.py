@@ -13,6 +13,7 @@ on virtual time.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Callable
 
@@ -68,23 +69,33 @@ class ServingSummary:
     decode_steps: int
 
     def format(self) -> str:
+        # Empty aggregates render as "n/a", never as a perfect-looking 0.0:
+        # a run where nothing completed must not report "p99 0.0 ms".
         return (
             f"requests          {self.completed}/{self.requests} completed"
             f" ({self.escalated} escalated)\n"
-            f"throughput        {self.tokens_per_s:9.1f} tok/s"
+            f"throughput        {_fmt(self.tokens_per_s, width=9)} tok/s"
             f"  ({self.total_tokens} tokens / {self.wall_s:.3f} s,"
             f" {self.decode_steps} decode steps)\n"
-            f"request latency   p50 {self.latency_p50_s * 1e3:8.1f} ms"
-            f"   p99 {self.latency_p99_s * 1e3:8.1f} ms\n"
-            f"first token       p50 {self.ttft_p50_s * 1e3:8.1f} ms"
-            f"   queue wait p50 {self.queue_wait_p50_s * 1e3:.1f} ms\n"
-            f"slot occupancy    {self.mean_slot_occupancy * 100:5.1f} %"
+            f"request latency   p50 {_fmt(self.latency_p50_s, 1e3, 8)} ms"
+            f"   p99 {_fmt(self.latency_p99_s, 1e3, 8)} ms\n"
+            f"first token       p50 {_fmt(self.ttft_p50_s, 1e3, 8)} ms"
+            f"   queue wait p50 {_fmt(self.queue_wait_p50_s, 1e3)} ms\n"
+            f"slot occupancy    {_fmt(self.mean_slot_occupancy, 100, 5)} %"
             f"   peak queue depth {self.peak_queue_depth}"
         )
 
 
+def _fmt(v: float, scale: float = 1.0, width: int = 0, prec: int = 1) -> str:
+    """Fixed-point with an honest gap: NaN (no data) renders as n/a."""
+    return f"{'n/a':>{width}}" if math.isnan(v) \
+        else f"{v * scale:{width}.{prec}f}"
+
+
 def _pct(values: list[float], q: float) -> float:
-    return float(np.percentile(np.asarray(values), q)) if values else 0.0
+    """Percentile; NaN (not a flattering 0.0) when nothing was observed."""
+    return float(np.percentile(np.asarray(values), q)) if values \
+        else float("nan")
 
 
 class MetricsCollector:
@@ -148,14 +159,14 @@ class MetricsCollector:
         wall = (self._end - self._start) \
             if self._start is not None and self._end is not None else 0.0
         occ = (float(np.mean(self.occupancy_samples)) / self.max_slots
-               if self.occupancy_samples else 0.0)
+               if self.occupancy_samples else float("nan"))
         return ServingSummary(
             requests=len(tls),
             completed=len(done),
             escalated=sum(t.escalated for t in done),
             total_tokens=total_tokens,
             wall_s=wall,
-            tokens_per_s=total_tokens / wall if wall > 0 else 0.0,
+            tokens_per_s=total_tokens / wall if wall > 0 else float("nan"),
             latency_p50_s=_pct(lat, 50),
             latency_p99_s=_pct(lat, 99),
             ttft_p50_s=_pct(ttft, 50),

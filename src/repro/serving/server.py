@@ -16,7 +16,12 @@ that stream:
 * **jitted fixed-shape steps** — :func:`step_fns` builds ``prefill``/
   ``decode`` closures padded to the pool shape with donated caches, so the
   hot decode loop traces exactly once (asserted in
-  tests/test_serving_server.py);
+  tests/test_serving_server.py). The decode step runs the *fused*
+  single-launch executor (``core.plan.compile_decode_step`` — KV gather,
+  attention over the slot pool, the Bayesian FFN and the Welford posterior
+  in ONE ``kernels/fused_plan`` launch) whenever the config has a fused
+  lowering, with the per-op ``transformer.decode_step`` path as the
+  ``FusedPlanUnsupported`` fallback;
 * **first-class uncertainty** — every decode step returns the per-request
   relative uncertainty; consecutive flagged tokens drive per-request
   escalation state, and the policy can early-terminate (``"terminate"``) or
@@ -52,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
+from repro.core import plan as plan_lib
 from repro.core import scheduler as scheduler_lib, uncertainty as unc_lib
 from repro.models import transformer
 from repro.models.model import Model
@@ -102,23 +108,55 @@ class StepFns:
     and ``decode(params, caches, tokens [n*b, 1], pos)`` both return
     ``(mean_logp [b, V], rel_unc [b], caches)``; ``pos`` is scalar or
     per-row [n*b]. ``trace_counts`` increments at *trace* time — the
-    retrace-count observable the tests pin down."""
+    retrace-count observable the tests pin down (the fused decode's traces
+    live in ``core.plan.fused_trace_counts``, keyed on ``fused_spec``).
+    ``fused_spec`` is the decode chain's static shape-key when the fused
+    single-launch executor is selected, None when the per-op path is;
+    ``fused_state["blocked"]`` records the pool-shape keys whose first call
+    tripped a kernel guard into the per-op fallback."""
     n_samples: int
     prefill: Callable
     decode: Callable
     trace_counts: dict[str, int]
+    fused_spec: object | None = None
+    fused_state: dict | None = None
+
+    def fused_live(self) -> bool:
+        """True iff the decode hot loop is running the fused executor and
+        no pool shape has fallen back to the per-op path — what a benchmark
+        must check *after* its run to claim the fused numbers are real."""
+        return self.fused_spec is not None and \
+            not (self.fused_state or {}).get("blocked")
 
 
-@functools.lru_cache(maxsize=None)
-def step_fns(model: Model, expand_masks: bool = True) -> StepFns:
-    """Build (and cache per model config) the jitted serving steps.
+def step_fns(model: Model, expand_masks: bool = True,
+             fused: bool | None = None) -> StepFns:
+    """Build (and cache per *config*) the jitted serving steps.
 
     expand_masks=True is the Bayesian serving form: rows are the mask
     expansion (mask-major groups, row j uses mask ``j // b``). With
     expand_masks=False (or a non-Bayesian config) rows are plain requests
     and the posterior is the single-sample degenerate case — the legacy
-    ``generate`` path."""
-    cfg = model.cfg
+    ``generate`` path.
+
+    ``fused`` selects the decode executor the same way
+    ``engine.predict_packed(fused=)`` does: ``True`` requires the fused
+    single-launch decode step (``core.plan.compile_decode_step``) and
+    surfaces ``FusedPlanUnsupported``; ``False`` forces the per-op
+    ``transformer.decode_step`` path; ``None`` (default) tries fused and
+    falls back per-op when the config has no fused lowering or the kernel
+    tier's VMEM/alignment guards fire (at first call).
+
+    The cache key is the hashable ``ModelConfig`` (plus ``expand_masks`` /
+    ``fused``), never the ``Model`` instance — building steps must not pin
+    model objects for the life of the process. A bare config is accepted
+    in place of a model."""
+    cfg = getattr(model, "cfg", model)
+    return _step_fns(cfg, bool(expand_masks), fused)
+
+
+@functools.lru_cache(maxsize=None)
+def _step_fns(cfg, expand_masks: bool, fused: bool | None) -> StepFns:
     bayes = cfg.bayesian and expand_masks
     n = cfg.mask_samples if bayes else 1
     counts = {"prefill": 0, "decode": 0}
@@ -146,11 +184,63 @@ def step_fns(model: Model, expand_masks: bool = True) -> StepFns:
         mean, rel = posterior(logits, n)
         return mean, rel, caches
 
+    perop_decode = jax.jit(decode_impl, donate_argnums=donate)
+
+    fused_step = fspec = None
+    if fused is not False:
+        # On the xla kernel tier there is no launch to fuse — the "fused"
+        # executor would just be the fully unrolled reference graph (L
+        # layers × H heads in Python), which traces/compiles far slower
+        # than the per-op scanned decode for identical math. Auto-select
+        # prefers per-op there; fused=True still forces the ref form
+        # (in-process A/B and the forced-xla CI leg rely on it).
+        from repro.kernels.fused_plan import ops as fp_ops
+        if fused or fp_ops.KERNEL_BACKEND != "xla":
+            try:
+                fspec = plan_lib.decode_fused_spec(
+                    cfg, expand_masks=expand_masks)
+                fused_step = plan_lib.compile_decode_step(
+                    cfg, expand_masks=expand_masks)
+            except plan_lib.FusedPlanUnsupported:
+                if fused:
+                    raise
+
+    fused_state = None
+    if fused_step is None:
+        decode = perop_decode
+    else:
+        fused_state = {"blocked": set()}
+
+        def _shape_key(caches, tokens):
+            # What the kernel guards actually scale with: pool rows and the
+            # cache sequence capacities (kpos leaves are [reps, R, smax]).
+            return (tokens.shape[0],) + tuple(sorted(
+                {leaf.shape[-1] for leaf in jax.tree.leaves(caches)
+                 if leaf.ndim == 3}))
+
+        def decode(params, caches, tokens, pos):
+            # Fused-first with a per-POOL-SHAPE per-op fallback: the kernel
+            # tier's VMEM-residency / lane-alignment guards fire at trace
+            # time, from the first call with each pool shape, and depend on
+            # that shape — one oversized pool must not silently demote
+            # every other server on the same config.
+            key = _shape_key(caches, tokens)
+            if key not in fused_state["blocked"]:
+                try:
+                    return fused_step(params, caches, tokens, pos)
+                except plan_lib.FusedPlanUnsupported:
+                    if fused:
+                        raise
+                    fused_state["blocked"].add(key)
+            return perop_decode(params, caches, tokens, pos)
+
     return StepFns(
         n_samples=n,
         prefill=jax.jit(prefill_impl, static_argnames=("max_seq",)),
-        decode=jax.jit(decode_impl, donate_argnums=donate),
-        trace_counts=counts)
+        decode=decode,
+        trace_counts=counts,
+        fused_spec=fspec if fused_step is not None else None,
+        fused_state=fused_state)
 
 
 # ---------------------------------------------------------------------------
@@ -216,6 +306,9 @@ class ServerConfig:
     escalation_patience: int = 2      # consecutive flagged tokens to escalate
     escalation_policy: str = "flag"   # flag | terminate | deprioritize
     deprioritize_penalty: int = 10    # priority added on escalation preempt
+    fused: bool | None = None         # decode executor: True = require the
+                                      # fused single-launch step, False =
+                                      # per-op, None = auto w/ fallback
 
     def __post_init__(self) -> None:
         if self.escalation_policy not in ("flag", "terminate",
@@ -251,7 +344,7 @@ class BayesianLMServer:
             mesh
         self.schedule = scheduler_lib.SlotSchedule(model.cfg.mask_samples,
                                                    cfg.max_slots)
-        self.steps = step_fns(model)
+        self.steps = step_fns(model, fused=cfg.fused)
         # donate the pool on scatter (admission overwrites rows in place);
         # CPU has no donation support and warns, so only donate off-CPU
         self._scatter = jax.jit(transformer.cache_scatter_rows,

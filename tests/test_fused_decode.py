@@ -1,0 +1,348 @@
+"""Fused serving-decode step — the decode-side twin of test_fused_plan.
+
+Acceptance bar: one decode step of the whole mask-expanded pool through
+``core.plan.compile_decode_step`` must produce bitwise-identical tokens and
+fp-close rel-uncertainties versus the per-op ``transformer.decode_step``
+path, across {xla, pallas-interpret} backends, Bayesian (N=4) and N=1
+configs, scalar and per-row positions; the decode hot loop must be exactly
+ONE fused launch per step (dispatch spy) and must never retrace across
+same-shape steps (trace counter); and ``serving.server.step_fns`` must
+auto-select fused with the per-op path as the FusedPlanUnsupported fallback
+— without pinning Model instances in its cache.
+"""
+
+import gc
+import math
+import weakref
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import plan as plan_lib
+from repro.models import build_model
+from repro.serving import (BayesianLMServer, ServerConfig, server as
+                           server_lib)
+
+BACKENDS = ("xla", "pallas-interpret")
+
+
+def _smoke_cfg(**overrides):
+    return registry.smoke_config("qwen2-1.5b", n_layers=2, **overrides)
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _prefill_pool(cfg, params, b, plen=6, max_seq=12, seed=1):
+    """Expanded-pool prefill via the per-op steps: returns (first decoded
+    token [b], caches, next position)."""
+    fns = server_lib.step_fns(cfg, fused=False)
+    prompts = jax.random.randint(jax.random.PRNGKey(seed), (b, plen), 0,
+                                 cfg.vocab_size)
+    n = fns.n_samples
+    mean, _, caches = fns.prefill(params, jnp.tile(prompts, (n, 1)),
+                                  max_seq=max_seq)
+    return jnp.argmax(mean, -1).astype(jnp.int32), caches, plen
+
+
+def _greedy(decode, params, caches, tok0, n, start, steps, per_row):
+    """Drive a decode fn greedily; returns (tokens [steps, b], rel [steps,
+    b], final caches)."""
+    caches = jax.tree.map(lambda x: x, caches)      # private copy
+    cur = tok0
+    toks, rels = [], []
+    b = tok0.shape[0]
+    for i in range(steps):
+        rows_tok = jnp.tile(cur, (n,))[:, None]
+        pos = jnp.full((n * b,), start + i, jnp.int32) if per_row \
+            else jnp.int32(start + i)
+        mean, rel, caches = decode(params, caches, rows_tok, pos)
+        cur = jnp.argmax(mean, -1).astype(jnp.int32)
+        toks.append(np.asarray(cur))
+        rels.append(np.asarray(rel))
+    return np.stack(toks), np.stack(rels), caches
+
+
+# ---------------------------------------------------------------------------
+# equivalence grid: fused == per-op decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("n_masks", (4, 1))
+@pytest.mark.parametrize("per_row", (False, True))
+def test_fused_decode_matches_per_op(backend, n_masks, per_row, smoke):
+    cfg, _, params = smoke
+    if n_masks != cfg.mask_samples:
+        cfg = _smoke_cfg(mask_samples=n_masks)
+        params = build_model(cfg).init(jax.random.PRNGKey(0))
+    tok0, caches, start = _prefill_pool(cfg, params, b=3)
+    perop = server_lib.step_fns(cfg, fused=False).decode
+    fused = plan_lib.compile_decode_step(cfg, backend=backend)
+    n = cfg.mask_samples
+    t_ref, r_ref, c_ref = _greedy(perop, params, caches, tok0, n, start, 4,
+                                  per_row)
+    t_fus, r_fus, c_fus = _greedy(fused, params, caches, tok0, n, start, 4,
+                                  per_row)
+    np.testing.assert_array_equal(t_fus, t_ref)     # tokens bitwise-equal
+    np.testing.assert_allclose(r_fus, r_ref, rtol=1e-4, atol=1e-5)
+    for a, b_ in zip(jax.tree.leaves(c_fus), jax.tree.leaves(c_ref)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b_, np.float32),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fused_decode_local_attention_window(backend):
+    """Windowed decode: positions cross the rolling-cache boundary while
+    fused and per-op paths stay token-identical."""
+    cfg = _smoke_cfg(local_window=8,
+                     segments_override=((("local_attn",), 2),))
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    tok0, caches, start = _prefill_pool(cfg, params, b=2, plen=6,
+                                        max_seq=14)
+    perop = server_lib.step_fns(cfg, fused=False).decode
+    fused = plan_lib.compile_decode_step(cfg, backend=backend)
+    n = cfg.mask_samples
+    t_ref, r_ref, _ = _greedy(perop, params, caches, tok0, n, start, 6,
+                              True)
+    t_fus, r_fus, _ = _greedy(fused, params, caches, tok0, n, start, 6,
+                              True)
+    np.testing.assert_array_equal(t_fus, t_ref)
+    np.testing.assert_allclose(r_fus, r_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_fused_decode_packed_ffn_serving():
+    """The packed per-sample FFN serving form rides the fused decode too."""
+    cfg = _smoke_cfg()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    from repro.models import transformer
+    import dataclasses
+    pcfg = dataclasses.replace(cfg, packed_ffn_serving=True)
+    pparams = transformer.pack_ffn_params(cfg, params)
+    tok0, caches, start = _prefill_pool(pcfg, pparams, b=2)
+    perop = server_lib.step_fns(pcfg, fused=False).decode
+    fused = plan_lib.compile_decode_step(pcfg, backend="pallas-interpret")
+    n = cfg.mask_samples
+    t_ref, r_ref, _ = _greedy(perop, pparams, caches, tok0, n, start, 3,
+                              False)
+    t_fus, r_fus, _ = _greedy(fused, pparams, caches, tok0, n, start, 3,
+                              False)
+    np.testing.assert_array_equal(t_fus, t_ref)
+    np.testing.assert_allclose(r_fus, r_ref, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# dispatch: ONE fused launch per decode step
+# ---------------------------------------------------------------------------
+
+
+def test_fused_decode_single_launch_per_step(smoke, monkeypatch):
+    """The traced decode-step graph contains exactly one fused-kernel
+    dispatch — and the per-op kernels none — so every executed step is one
+    launch; repeated same-shape steps re-run the cached graph without
+    re-entering the dispatcher."""
+    cfg, _, params = smoke
+    from repro.kernels.fused_plan import ops as fp_ops
+    from repro.kernels.masked_ffn import ops as mffn_ops
+    calls = []
+    real = fp_ops.fused_decode
+    monkeypatch.setattr(fp_ops, "fused_decode",
+                        lambda *a, **k: calls.append("fused") or
+                        real(*a, **k))
+    monkeypatch.setattr(mffn_ops, "masked_ffn",
+                        lambda *a, **k: calls.append("masked_ffn"))
+    # b=5 is a unique pool shape in this session -> exactly one fresh trace
+    tok0, caches, start = _prefill_pool(cfg, params, b=5)
+    fused = plan_lib.compile_decode_step(cfg, backend="pallas-interpret")
+    _greedy(fused, params, caches, tok0, cfg.mask_samples, start, 1, True)
+    assert calls == ["fused"]
+    _greedy(fused, params, caches, tok0, cfg.mask_samples, start, 4, True)
+    assert calls == ["fused"]                     # cached graph: no re-entry
+
+
+def test_fused_decode_no_retrace_across_steps(smoke):
+    cfg, _, params = smoke
+    spec = plan_lib.decode_fused_spec(cfg)
+    key = (spec, "xla", "decode")
+    step = plan_lib.compile_decode_step(cfg, backend="xla")
+    tok0, caches, start = _prefill_pool(cfg, params, b=3)
+    n = cfg.mask_samples
+    _greedy(step, params, caches, tok0, n, start, 3, True)
+    traced = plan_lib.fused_trace_counts[key]
+    assert traced >= 1
+    _greedy(step, params, caches, tok0, n, start, 3, True)
+    assert plan_lib.fused_trace_counts[key] == traced    # no retrace
+    # a second executor handle for the same config hits the same lru entry
+    assert plan_lib.compile_decode_step(cfg, backend="xla") is step
+    # a new pool shape traces exactly once more
+    tok2, caches2, start2 = _prefill_pool(cfg, params, b=2)
+    _greedy(step, params, caches2, tok2, n, start2, 2, True)
+    assert plan_lib.fused_trace_counts[key] == traced + 1
+
+
+# ---------------------------------------------------------------------------
+# serving integration: auto-select + fallback + server equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_step_fns_auto_selects_fused(smoke):
+    from repro import compat
+    if compat.kernel_backend() == "xla":
+        pytest.skip("auto-select prefers the per-op path on the xla tier "
+                    "(no launch to fuse); fused=True still forces it")
+    cfg, model, _ = smoke
+    fns = server_lib.step_fns(model)
+    assert fns.fused_spec is not None
+    assert fns.fused_spec == plan_lib.decode_fused_spec(cfg)
+    assert server_lib.step_fns(cfg, fused=False).fused_spec is None
+
+
+def test_step_fns_falls_back_per_op_when_unsupported():
+    """xLSTM blocks have no fused decode lowering: fused=None degrades to
+    the per-op decode path; fused=True surfaces the error."""
+    cfg = registry.smoke_config("xlstm-350m")
+    fns = server_lib.step_fns(cfg)
+    assert fns.fused_spec is None
+    with pytest.raises(plan_lib.FusedPlanUnsupported):
+        server_lib.step_fns(cfg, fused=True)
+
+
+def test_step_fns_falls_back_on_vmem_guard(smoke, monkeypatch):
+    """The VMEM-residency guard fires at trace time, from the first decode
+    call with the pool's real shapes — fused=None must degrade per-op
+    mid-flight, report it via ``fused_live()``, and still produce
+    per-op-identical results. The fallback is keyed per pool shape: one
+    oversized pool must not demote other pool shapes on the same config."""
+    from repro import compat
+    if compat.kernel_backend() == "xla":
+        pytest.skip("guard lives in the Pallas tier; the forced xla probe "
+                    "routes everything to the reference path")
+    from repro.kernels.fused_plan import ops as fp_ops
+    cfg = _smoke_cfg(vocab_size=252)                # unique step_fns key
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    limit = fp_ops.VMEM_MOMENTS_LIMIT
+    monkeypatch.setattr(fp_ops, "VMEM_MOMENTS_LIMIT", 1)
+    fns = server_lib.step_fns(cfg)
+    assert fns.fused_spec is not None               # lowering itself is fine
+    assert fns.fused_live()                         # nothing tripped yet
+    tok0, caches, start = _prefill_pool(cfg, params, b=2)
+    n = cfg.mask_samples
+    t_got, r_got, _ = _greedy(fns.decode, params, caches, tok0, n, start,
+                              2, True)
+    assert not fns.fused_live()                     # the trip is observable
+    perop = server_lib.step_fns(cfg, fused=False).decode
+    t_ref, r_ref, _ = _greedy(perop, params, caches, tok0, n, start, 2,
+                              True)
+    np.testing.assert_array_equal(t_got, t_ref)
+    np.testing.assert_allclose(r_got, r_ref, rtol=1e-4, atol=1e-5)
+    # a DIFFERENT pool shape (guard restored) still takes the fused path:
+    # the fallback key is per shape, not a config-wide kill switch
+    monkeypatch.setattr(fp_ops, "VMEM_MOMENTS_LIMIT", limit)
+    key = (plan_lib.decode_fused_spec(cfg), None, "decode")
+    before = plan_lib.fused_trace_counts[key]
+    tok3, caches3, start3 = _prefill_pool(cfg, params, b=3)
+    _greedy(fns.decode, params, caches3, tok3, n, start3, 1, True)
+    assert plan_lib.fused_trace_counts[key] == before + 1
+
+
+def test_server_fused_matches_per_op_server(smoke):
+    """Whole-server equivalence: identical requests through a fused-decode
+    server and a per-op server produce identical tokens and uncertainties."""
+    from repro import compat
+    if compat.kernel_backend() == "xla":
+        pytest.skip("auto-select prefers the per-op path on the xla tier")
+    cfg, model, params = smoke
+    prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(7), (3, 6),
+                                            0, cfg.vocab_size))
+
+    def run(fused):
+        srv = BayesianLMServer(model, params, ServerConfig(
+            max_slots=2, max_prompt_len=8, max_new_tokens=4, fused=fused))
+        rids = [srv.submit(p) for p in prompts]
+        srv.run()
+        return [srv.result(r) for r in rids], srv
+
+    got, srv_f = run(None)
+    want, srv_p = run(False)
+    assert srv_f.steps.fused_spec is not None
+    assert srv_p.steps.fused_spec is None
+    for g, w in zip(got, want):
+        assert g.generated == w.generated
+        np.testing.assert_allclose(g.uncertainty, w.uncertainty,
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_step_fns_does_not_pin_model(smoke):
+    """Regression (PR 5 satellite): the step_fns cache is keyed on the
+    hashable config; dropping the last external Model reference frees it."""
+    cfg, _, _ = smoke
+    model = build_model(cfg)
+    fns = server_lib.step_fns(model)
+    assert fns is server_lib.step_fns(model)        # cache still hits
+    ref = weakref.ref(model)
+    del model
+    gc.collect()
+    assert ref() is None, "step_fns cache retained the Model instance"
+
+
+# ---------------------------------------------------------------------------
+# pricing + metrics satellites
+# ---------------------------------------------------------------------------
+
+
+def test_decode_traffic_and_latency_pricing(smoke):
+    cfg, _, _ = smoke
+    spec = plan_lib.decode_fused_spec(cfg)
+    rows, smax = 16, 24
+    per_op = plan_lib.decode_traffic(spec, rows, smax, fused=False)
+    fused = plan_lib.decode_traffic(spec, rows, smax, fused=True)
+    assert fused.total_bytes < per_op.total_bytes
+    assert fused.weight_bytes == per_op.weight_bytes   # weights cross once
+    assert fused.act_bytes < per_op.act_bytes          # resident inter-stage
+    assert fused.weight_loads == 1                     # ONE launch per token
+    assert per_op.weight_loads == 2 * cfg.n_layers + 2
+    assert plan_lib.decode_modeled_latency(spec, rows, smax, fused=True) < \
+        plan_lib.decode_modeled_latency(spec, rows, smax, fused=False)
+
+
+def test_prefill_rejects_prompt_beyond_cache_capacity(smoke):
+    """The branch-free prefill cache build must stay LOUD when a global
+    cache cannot hold the prompt (max_seq too small) — only the rolling
+    local-window cache may drop positions, because those are outside the
+    attention window anyway."""
+    cfg, model, params = smoke
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, 8), 0,
+                              cfg.vocab_size)
+    with pytest.raises(ValueError, match="cache capacity"):
+        model.prefill(params, {"tokens": toks}, max_seq=6)
+    # rolling local-window cache: s > smax == window is the legitimate case
+    lcfg = registry.smoke_config("recurrentgemma-2b")
+    lmodel = build_model(lcfg)
+    lparams = lmodel.init(jax.random.PRNGKey(0))
+    ltoks = jax.random.randint(jax.random.PRNGKey(4),
+                               (1, lcfg.local_window + 4), 0,
+                               lcfg.vocab_size)
+    lp, _ = lmodel.prefill(lparams, {"tokens": ltoks},
+                           max_seq=lcfg.local_window + 6)
+    assert bool(jnp.isfinite(lp).all())
+
+
+def test_metrics_empty_run_reports_na():
+    """Satellite: a run with zero completed requests must not report a
+    perfect-latency 0.0 — NaN in the summary, n/a in the rendering."""
+    from repro.serving.metrics import MetricsCollector
+    s = MetricsCollector(4).summary()
+    for v in (s.latency_p50_s, s.latency_p99_s, s.ttft_p50_s,
+              s.queue_wait_p50_s, s.tokens_per_s, s.mean_slot_occupancy):
+        assert math.isnan(v)
+    text = s.format()
+    assert "n/a" in text
+    assert "0.0 ms" not in text and "0.0 tok/s" not in text

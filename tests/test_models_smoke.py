@@ -191,3 +191,58 @@ def test_vlm_positions_input():
     logits, cache = model.prefill(params, batch)
     assert logits.shape == (b, cfg.vocab_size)
     assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("rel", [-2, -1, 0, 1, 16, 19])
+def test_local_attention_window_boundary_prefill_decode(rel):
+    """Pin the local-attention boundaries: prompts at s ∈ {w-2, w-1, w, w+1,
+    2w, 2w+3} prefill to a cache that decodes exactly like the full
+    (window-masked) attention graph — the s < window, s == window and
+    s > window cases share one slot = pos % smax cache layout, and the
+    banded-vs-full attention split at s > window is value-equivalent."""
+    cfg = registry.smoke_config("recurrentgemma-2b")
+    w = cfg.local_window
+    s = w + rel
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, s), 0,
+                              cfg.vocab_size)
+    lp, caches = model.prefill(params, {"tokens": toks}, max_seq=s + 4)
+    full, _ = model.forward(params, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(full[:, -1]),
+                               rtol=5e-3, atol=5e-3)
+    # decode across the window boundary: every step must match the
+    # teacher-forced full-attention forward at the same length
+    cur = jnp.argmax(lp, -1).astype(jnp.int32)
+    seq = jnp.concatenate([toks, cur[:, None]], 1)
+    for i in range(3):
+        ld, caches = model.decode_step(params, caches, cur[:, None],
+                                       jnp.int32(s + i))
+        ref, _ = model.forward(params, {"tokens": seq})
+        np.testing.assert_allclose(np.asarray(ld), np.asarray(ref[:, -1]),
+                                   rtol=5e-3, atol=5e-3)
+        cur = jnp.argmax(ld, -1).astype(jnp.int32)
+        seq = jnp.concatenate([seq, cur[:, None]], 1)
+
+
+def test_local_attention_rolling_cache_slot_invariant():
+    """The prefill cache layout IS kv_cache_update's invariant: every kept
+    position p sits at slot p % smax, for prompts shorter, equal to, and
+    longer than the window."""
+    cfg = registry.smoke_config("recurrentgemma-2b")
+    w = cfg.local_window
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    for s in (w - 3, w, w + 5):
+        toks = jax.random.randint(jax.random.PRNGKey(2), (1, s), 0,
+                                  cfg.vocab_size)
+        _, caches = model.prefill(params, {"tokens": toks}, max_seq=s + 2)
+        # hybrid smoke: segment 0 block b2 is the local_attn layer
+        kpos = np.asarray(caches[0]["b2"]["kpos"][0, 0])     # [smax]
+        smax = kpos.shape[0]
+        assert smax == min(w, s + 2)
+        for slot, p in enumerate(kpos):
+            if p >= 0:
+                assert slot == p % smax, (s, slot, p)
+        kept = sorted(p for p in kpos if p >= 0)
+        assert kept == list(range(max(0, s - smax), s))
