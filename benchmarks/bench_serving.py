@@ -1,6 +1,7 @@
 """Continuous batching vs looped one-shot serving on a Poisson trace.
 
     PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [--fused]
+                                                      [--mixed] [--seed S]
 
 Replays one Poisson arrival trace through two serving paths at matched
 uncertainty output (same N-mask posterior per token):
@@ -23,10 +24,18 @@ actually run fused (no silent fallback) and must emit tokens bitwise
 identical to the per-op decode.
 
 Arrivals are indexed in *decode steps* (a Poisson process sampled at step
-granularity) so the trace is hardware-independent and reproducible; wall
-time is measured for throughput. Correctness gate: per-request tokens must
-match exactly between the paths and per-token uncertainties to fp32
-tolerance — the speedup is scheduling + launch fusion, not approximation.
+granularity) so the trace is hardware-independent and reproducible; the
+whole trace is a pure function of ``--seed`` (recorded in the JSON
+provenance). Wall time is measured for throughput. Correctness gate:
+per-request tokens must match exactly between the paths and per-token
+uncertainties to fp32 tolerance — the speedup is scheduling + launch
+fusion, not approximation.
+
+``--mixed`` adds the mixed-modality leg: synthetic IVIM scans are submitted
+into the SAME server pool (``submit_scan`` voxel-chunk work items)
+interleaved with the LM trace. Gates: the pooled scan moments must be
+bitwise-identical to the direct ``engine.predict_volume`` path, and the LM
+tokens must be unchanged by the co-resident scans.
 
 Full (non-smoke) runs via ``benchmarks/run.py`` emit the canonical
 ``BENCH_serving.json`` perf-trajectory artifact.
@@ -91,7 +100,59 @@ def _run_server(model, params, scfg, arrivals, prompts, max_new: int):
     return outs, wall, server.metrics.summary()
 
 
-def run(smoke: bool = False, quiet: bool = False) -> dict:
+def _run_mixed(model, params, scfg, arrivals, prompts, max_new: int,
+               smoke: bool, seed: int):
+    """Replay the LM trace with synthetic IVIM scans interleaved into the
+    same pool: scans arrive as voxel-chunk work items (``submit_scan``) at
+    step 0 and mid-trace. Returns (lm_outs, scan results, wall, summary)
+    where each scan result is (pooled (mean, std), direct (mean, std))."""
+    import dataclasses
+
+    import jax
+
+    from repro.ivim import model as ivim_model
+    from repro.serving import BayesianLMServer, engine
+
+    icfg = ivim_model.IvimConfig(n_masks=model.cfg.mask_samples, scale=2.0)
+    iparams, istate = ivim_model.init(icfg, jax.random.PRNGKey(0))
+    plan = ivim_model.pack_for_serving(icfg, iparams, istate)
+    n_scans = 1 if smoke else 2
+    n_vox = 96 if smoke else 4096
+    chunk = 32 if smoke else 512
+    rng = np.random.default_rng(seed + 1)
+    vols = [rng.uniform(size=(n_vox, icfg.width)).astype(np.float32)
+            for _ in range(n_scans)]
+    scan_arrivals = [0, int(arrivals[len(arrivals) // 2])][:n_scans]
+    # the reference moments, computed OUTSIDE the timed replay
+    direct = [engine.predict_packed(plan, v, chunk=chunk) for v in vols]
+
+    scfg = dataclasses.replace(scfg, max_queue=scfg.max_queue + n_scans)
+    server = BayesianLMServer(model, params, scfg)
+    pending = list(zip(arrivals, prompts))
+    scan_pending = list(zip(scan_arrivals, vols))
+    rids, sids = [], []
+    step_i = 0
+    t0 = time.perf_counter()
+    while pending or scan_pending or server.queue_depth \
+            or server.occupied_slots:
+        while pending and pending[0][0] <= step_i:
+            rids.append(server.submit(pending.pop(0)[1],
+                                      max_new_tokens=max_new))
+        while scan_pending and scan_pending[0][0] <= step_i:
+            sids.append(server.submit_scan(plan, scan_pending.pop(0)[1],
+                                           chunk=chunk))
+        server.step()
+        step_i += 1
+    wall = time.perf_counter() - t0
+    lm_outs = [(np.asarray(server.result(r).generated, np.int64),
+                np.asarray(server.result(r).uncertainty)) for r in rids]
+    scans = [(server.result(s).scan_moments(), d)
+             for s, d in zip(sids, direct)]
+    return lm_outs, scans, wall, server.metrics.summary()
+
+
+def run(smoke: bool = False, quiet: bool = False, seed: int = 0,
+        mixed: bool = False) -> dict:
     import dataclasses
 
     import jax
@@ -111,7 +172,7 @@ def run(smoke: bool = False, quiet: bool = False) -> dict:
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     arrivals, prompts = make_trace(n_requests, mean_gap, prompt_len,
-                                   cfg.vocab_size)
+                                   cfg.vocab_size, seed=seed)
 
     from repro.serving import ServerConfig, server as server_lib
     scfg = ServerConfig(max_slots=max_slots, max_queue=n_requests,
@@ -132,6 +193,26 @@ def run(smoke: bool = False, quiet: bool = False) -> dict:
     # checked AFTER the runs: the kernel guards fire at first call, so a
     # build-time check would report a silently-fallen-back leg as fused
     fused_active = server_lib.step_fns(cfg, fused=scfg.fused).fused_live()
+
+    mixed_res = None
+    if mixed:
+        mx_outs, mx_scans, mx_wall, mx_summary = _run_mixed(
+            model, params, scfg, arrivals, prompts, max_new, smoke, seed)
+        mixed_res = {
+            "tokens_match": all(
+                np.array_equal(bt, mt) for (bt, _), (mt, _)
+                in zip(base_outs, mx_outs)),
+            "moments_bitwise": all(
+                np.array_equal(np.asarray(pm), np.asarray(dm)) and
+                np.array_equal(np.asarray(ps), np.asarray(ds))
+                for (pm, ps), (dm, ds) in mx_scans),
+            "n_scans": len(mx_scans),
+            "total_voxels": mx_summary.total_voxels,
+            "voxels_per_s": mx_summary.voxels_per_s,
+            "lm_tok_s": sum(len(t) for t, _ in mx_outs) / mx_wall,
+            "mean_voxel_occupancy": mx_summary.mean_voxel_occupancy,
+            "summary": mx_summary,
+        }
 
     total_tokens = sum(len(t) for t, _ in srv_outs)
     tokens_match = all(np.array_equal(bt, st) for (bt, _), (st, _)
@@ -184,6 +265,15 @@ def run(smoke: bool = False, quiet: bool = False) -> dict:
               f"fused vs per-op {fused_tokens_match}   "
               f"max |d rel-unc|: {max_unc_delta:.2e}")
         print(summary.format())
+        if mixed_res is not None:
+            print(f"mixed pool: {mixed_res['n_scans']} scans "
+                  f"({mixed_res['total_voxels']} voxels) interleaved -> "
+                  f"{mixed_res['voxels_per_s']:,.0f} vox/s alongside "
+                  f"{mixed_res['lm_tok_s']:.1f} tok/s; "
+                  f"scan moments bitwise == direct: "
+                  f"{mixed_res['moments_bitwise']}, lm tokens unchanged: "
+                  f"{mixed_res['tokens_match']}")
+            print(mixed_res["summary"].format())
     return {
         "baseline_tok_s": base_tps,
         "server_tok_s": srv_tps,
@@ -199,6 +289,7 @@ def run(smoke: bool = False, quiet: bool = False) -> dict:
         "modeled_bytes_per_token_perop": bytes_perop,
         "summary": summary,
         "perop_summary": po_summary,
+        "mixed": mixed_res,
         "provenance": {
             **compat.version_summary(),
             "arch": cfg.arch_id, "n_layers": cfg.n_layers,
@@ -206,7 +297,8 @@ def run(smoke: bool = False, quiet: bool = False) -> dict:
             "vocab": cfg.vocab_size, "n_masks": cfg.mask_samples,
             "max_slots": max_slots, "max_seq": scfg.max_seq,
             "n_requests": n_requests, "prompt_len": prompt_len,
-            "max_new_tokens": max_new, "mode": "smoke" if smoke else "full",
+            "max_new_tokens": max_new, "seed": seed,
+            "mode": "smoke" if smoke else "full",
         },
     }
 
@@ -244,6 +336,17 @@ def write_bench_json(out: dict, path: pathlib.Path = BENCH_JSON) -> dict:
         "fused_decode_active": out["fused_active"],
         "tokens_identical_fused_vs_per_op": out["fused_tokens_match"],
     }
+    if out.get("mixed") is not None:
+        mx = out["mixed"]
+        payload["mixed_pool"] = {
+            "n_scans": mx["n_scans"],
+            "total_voxels": mx["total_voxels"],
+            "voxels_per_s": mx["voxels_per_s"],
+            "lm_tok_s": mx["lm_tok_s"],
+            "mean_voxel_occupancy": mx["mean_voxel_occupancy"],
+            "scan_moments_bitwise_vs_direct": mx["moments_bitwise"],
+            "lm_tokens_unchanged": mx["tokens_match"],
+        }
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     return payload
 
@@ -256,8 +359,15 @@ def main() -> int:
                     help="gate on the fused decode leg: it must run fused "
                          "(no silent per-op fallback) and match the per-op "
                          "tokens bitwise")
+    ap.add_argument("--mixed", action="store_true",
+                    help="add the mixed-modality leg: IVIM scans as "
+                         "voxel-chunk work items in the same pool; gates on "
+                         "bitwise scan moments and unchanged LM tokens")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="trace seed (arrivals, prompts, scan volumes); "
+                         "recorded in the JSON provenance")
     args = ap.parse_args()
-    res = run(smoke=args.smoke)
+    res = run(smoke=args.smoke, seed=args.seed, mixed=args.mixed)
     if not res["tokens_match"]:
         print("ERROR: server tokens diverged from one-shot serving")
         return 1
@@ -277,6 +387,15 @@ def main() -> int:
             res["modeled_bytes_per_token_perop"]:
         print("ERROR: fused decode step models no HBM-byte reduction")
         return 1
+    if args.mixed:
+        if not res["mixed"]["moments_bitwise"]:
+            print("ERROR: pooled scan moments diverged from the direct "
+                  "predict_volume path (must be bitwise-identical)")
+            return 1
+        if not res["mixed"]["tokens_match"]:
+            print("ERROR: LM tokens changed when scans were interleaved "
+                  "into the pool")
+            return 1
     return 0
 
 

@@ -95,7 +95,7 @@ def main() -> None:
     print("=" * 72)
     print("bench_serving — continuous batching vs looped one-shot serving")
     print("=" * 72)
-    srv = bench_serving.run(smoke=args.smoke)
+    srv = bench_serving.run(smoke=args.smoke, mixed=True)
     csv.append(("serving_continuous_batching_speedup", srv["speedup"],
                 "server tok/s over looped serve_uncertain, Poisson trace"))
     csv.append(("serving_fused_decode_speedup", srv["fused_vs_per_op"],
@@ -106,6 +106,11 @@ def main() -> None:
                 "modeled per-token decode HBM bytes, per-op / fused"))
     csv.append(("serving_uncertainty_max_delta", srv["max_unc_delta"],
                 "per-token rel-unc |server - one-shot|"))
+    if srv["mixed"] is not None:
+        csv.append(("serving_mixed_pool_voxels_per_s",
+                    srv["mixed"]["voxels_per_s"],
+                    "IVIM voxel-chunk throughput interleaved with the LM "
+                    "trace in one pool"))
     # canonical serving perf-trajectory artifact (fused vs per-op decode,
     # with backend + shape provenance). Smoke runs must not clobber the
     # committed full-size numbers.

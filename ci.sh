@@ -50,3 +50,9 @@ REPRO_KERNEL_BACKEND=pallas-interpret \
 # if the fused step models no per-token HBM-byte reduction.
 REPRO_KERNEL_BACKEND=pallas-interpret \
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_serving --smoke --fused
+
+# Mixed-modality smoke: IVIM scans as voxel-chunk work items interleaved
+# into the same serving pool as the LM trace — exits nonzero if the pooled
+# scan moments are not bitwise-identical to the direct predict_volume path
+# or if co-resident scans perturb the LM tokens.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_serving --smoke --mixed

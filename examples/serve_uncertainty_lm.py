@@ -16,11 +16,19 @@ continuous-batching server instead — an admission queue feeding a
 prints the serving metrics (tokens/s, latency percentiles, slot occupancy).
 Both paths produce identical tokens and uncertainties; the server is how
 the batch-level mask schedule amortizes over live traffic.
+
+``--scan`` (with ``--server``) additionally submits a synthetic IVIM scan
+volume into the SAME pool as a voxel-chunk work item (``submit_scan``): one
+slot, one fused-moments chunk per engine step, sharing the LM requests'
+queue, backpressure and escalation policy. The example prints per-modality
+latency and uncertainty summaries — the paper's MRI workload and its LM
+analogue served by one scheduler.
 """
 
 import argparse
 
 import jax
+import numpy as np
 
 from repro.configs import registry
 from repro.models import build_model
@@ -53,7 +61,13 @@ def main() -> None:
                     help="request count in --server mode")
     ap.add_argument("--slots", type=int, default=2,
                     help="KV slot-pool size in --server mode")
+    ap.add_argument("--scan", action="store_true",
+                    help="also submit a synthetic IVIM scan volume into the "
+                         "same pool (--server mode): voxel chunks and LM "
+                         "tokens share slots, queue and escalation policy")
     args = ap.parse_args()
+    if args.scan and not args.server:
+        raise SystemExit("--scan needs --server (the scan rides the pool)")
 
     cfg = registry.smoke_config(args.arch, mask_samples=args.n_masks)
     if not cfg.has_decode:
@@ -70,6 +84,19 @@ def main() -> None:
             max_new_tokens=args.tokens,
             uncertainty_threshold=args.threshold))
         rids = [server.submit(p) for p in prompts]
+        sid = None
+        if args.scan:
+            from repro.ivim import model as ivim_model
+            icfg = ivim_model.IvimConfig(n_masks=args.n_masks, scale=2.0)
+            iparams, istate = ivim_model.init(icfg, jax.random.PRNGKey(2))
+            plan = ivim_model.pack_for_serving(icfg, iparams, istate)
+            shape = (8, 8, 4)                       # synthetic IVIM volume
+            vol = np.random.default_rng(3).uniform(
+                size=shape + (icfg.width,)).astype(np.float32)
+            sid = server.submit_scan(plan, vol.reshape(-1, icfg.width),
+                                     chunk=64)
+            print(f"scan: {shape} IVIM volume ({vol[..., 0].size} voxels, "
+                  f"{icfg.width} b-values) as one voxel-chunk work item")
         summary = server.run()
         total_flagged = 0
         for i, rid in enumerate(rids):
@@ -80,6 +107,24 @@ def main() -> None:
         print(f"\nflagged {total_flagged}/"
               f"{sum(len(server.result(r).generated) for r in rids)} tokens"
               f" for review")
+        if sid is not None:
+            st = server.result(sid)
+            mean, std = st.scan_moments()
+            rel = np.asarray(std) / np.maximum(np.abs(np.asarray(mean)),
+                                               1e-12)
+            tl = server.metrics.timelines
+            print(f"\n-- scan (req {sid}, modality "
+                  f"{tl[sid].modality}) --")
+            print(f"chunks    {len(st.chunk_results)} "
+                  f"({sum(st.flags)} flagged above {args.threshold}, "
+                  f"{st.preempts} preemptions)")
+            print(f"latency   {tl[sid].latency * 1e3:.1f} ms "
+                  f"(queue wait {tl[sid].queue_wait * 1e3:.1f} ms)")
+            print(f"voxel rel-unc   mean {rel.mean():.3f}   "
+                  f"max {rel.max():.3f}")
+            lm_lat = [tl[r].latency for r in rids]
+            print(f"lm latency alongside   p50 "
+                  f"{np.percentile(lm_lat, 50) * 1e3:.1f} ms")
         print(f"\n-- serving metrics ({args.slots} slots x "
               f"{args.n_masks} mask rows each) --")
         print(summary.format())

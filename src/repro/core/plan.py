@@ -63,6 +63,7 @@ import numpy as np
 
 from repro.core import latency_model, packing
 from repro.core import scheduler as sched_lib
+from repro.core import uncertainty as unc_lib
 from repro.kernels.fused_plan import ref as fused_ref
 from repro.kernels.fused_plan.ref import FusedPlanUnsupported
 
@@ -75,6 +76,8 @@ __all__ = [
     "lower_fused", "execute_fused", "fused_executor",
     "FusedPlanUnsupported", "fused_trace_counts",
     "lower_fused_decode", "compile_decode_step", "decode_fused_spec",
+    "prefill_buckets", "prefill_bucket", "prefill_fused_spec",
+    "compile_prefill_step",
     "decode_traffic", "decode_modeled_latency",
 ]
 
@@ -1012,6 +1015,124 @@ def decode_fused_spec(cfg, *, expand_masks: bool = True
                       ) -> fused_ref.FusedDecodeSpec:
     """Static shape-key of the fused decode executor (trace-counter key)."""
     return lower_fused_decode(cfg, expand_masks=expand_masks)
+
+
+# ---------------------------------------------------------------------------
+# bucketed fused prefill (bounded-retrace admission)
+# ---------------------------------------------------------------------------
+#
+# Admission used to retrace the jitted prefill once per *distinct* prompt
+# length. The bucketed form zero-pads the prompt to a small set of length
+# buckets (powers of two up to max_seq, plus max_seq itself) and runs ONE
+# prefill graph per bucket with the true length as a *traced* scalar: the
+# last-token logits are gathered at length-1 (causal attention makes that
+# position blind to the pad tail) and the pad tail's cache entries are
+# trimmed back to the init state — bitwise identical to an exact-length
+# prefill, with the distinct trace count bounded by the bucket set instead
+# of the prompt-length set. Support is gated through the same
+# FusedDecodeSpec lowering the fused decode step uses (lower_fused_decode +
+# kernels/fused_plan.check_prefill_paddable): configs it rejects fall back
+# to the per-length exact prefill in serving/server.step_fns.
+
+
+@functools.lru_cache(maxsize=None)
+def prefill_buckets(max_seq: int,
+                    buckets: tuple[int, ...] | None = None
+                    ) -> tuple[int, ...]:
+    """Resolve the prefill length-bucket set against a cache capacity.
+
+    ``None`` -> powers of two below ``max_seq`` plus ``max_seq`` itself
+    (every length <= max_seq has a bucket, pad waste < 2x). An explicit set
+    is validated loudly — empty or non-positive bucket sets raise — then
+    sorted, deduplicated, and capped at ``max_seq`` (a bucket beyond the
+    cache capacity could never be prefilled)."""
+    if max_seq < 1:
+        raise ValueError(f"max_seq {max_seq} < 1")
+    if buckets is None:
+        out, b = [], 1
+        while b < max_seq:
+            out.append(b)
+            b <<= 1
+        out.append(max_seq)
+        return tuple(sorted(set(out)))
+    vals = tuple(int(b) for b in buckets)
+    if not vals:
+        raise ValueError("empty prefill bucket set (use None for the "
+                         "power-of-two default, or () upstream to disable "
+                         "bucketing)")
+    if any(b < 1 for b in vals):
+        raise ValueError(f"non-positive prefill bucket in {vals}")
+    return tuple(sorted({b for b in vals if b <= max_seq}))
+
+
+def prefill_bucket(length: int, max_seq: int,
+                   buckets: tuple[int, ...] | None = None) -> int | None:
+    """Smallest bucket >= ``length`` (None when no bucket covers it — the
+    caller falls back to an exact-length prefill)."""
+    for b in prefill_buckets(max_seq, buckets):
+        if b >= length:
+            return b
+    return None
+
+
+def prefill_fused_spec(cfg, *, expand_masks: bool = True
+                       ) -> fused_ref.FusedDecodeSpec:
+    """Static shape-key of the bucketed prefill (trace-counter key), and its
+    support gate: raises :class:`FusedPlanUnsupported` when padded-bucket
+    prefill would not be exact for ``cfg`` — no fused decode lowering
+    (MoE / recurrent / M-RoPE / non-causal), or a local-attention rolling
+    cache whose pad-tail writes would evict real context."""
+    return fused_ref.check_prefill_paddable(
+        lower_fused_decode(cfg, expand_masks=expand_masks))
+
+
+@functools.lru_cache(maxsize=256)
+def _prefill_runner(cfg, expand_masks: bool, bucket: int, max_seq: int,
+                    backend: str | None):
+    """One jitted bucketed-prefill executor per (config, expansion, bucket,
+    capacity, backend) — stable across servers, so jit's shape cache applies
+    and ``fused_trace_counts[(spec, backend, "prefill", bucket, max_seq)]``
+    observes the trace count (bounded by the bucket set)."""
+    spec = prefill_fused_spec(cfg, expand_masks=expand_masks)
+    bayes = cfg.bayesian and expand_masks
+    n = cfg.mask_samples if bayes else 1
+
+    def run(params, tokens, length):
+        fused_trace_counts[(spec, backend, "prefill", bucket, max_seq)] += 1
+        from repro.models import transformer
+        rows = tokens.shape[0]
+        ids = jnp.repeat(jnp.arange(n), rows // n) if bayes else None
+        ln = jnp.asarray(length, jnp.int32)
+        logits, caches = transformer.prefill(
+            cfg, params, {"tokens": tokens}, max_seq=max_seq,
+            mask_ids=ids, last_index=ln - 1)
+        caches = transformer.cache_trim_positions(caches, ln)
+        mean, rel = unc_lib.token_posterior(logits, n)
+        return mean, rel, caches
+
+    return jax.jit(run), spec
+
+
+def compile_prefill_step(cfg, bucket: int, max_seq: int, *,
+                         expand_masks: bool = True,
+                         backend: str | None = None) -> Callable:
+    """The bucketed prefill of ``cfg`` at one length bucket, as a cached
+    jitted executor ``(params, tokens [R, bucket], length) ->
+    (mean_logp [b, V], rel_unc [b], caches)``.
+
+    ``tokens`` is the prompt zero-padded to ``bucket`` columns; ``length``
+    (the true prompt length, a *traced* scalar) selects the logits position
+    and the cache-trim boundary — so every length sharing a bucket shares
+    one trace. ``backend`` is a provenance label on the trace counter (the
+    prefill graph itself lowers through XLA on every tier); raises
+    :class:`FusedPlanUnsupported` via :func:`prefill_fused_spec` when
+    padded-bucket prefill would not be exact."""
+    if backend not in (None, "xla", "pallas-interpret", "pallas-tpu"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if not 1 <= bucket <= max_seq:
+        raise ValueError(f"bucket {bucket} outside [1, max_seq={max_seq}]")
+    return _prefill_runner(cfg, bool(expand_masks), int(bucket),
+                           int(max_seq), backend)[0]
 
 
 def decode_traffic(spec: fused_ref.FusedDecodeSpec, rows: int, max_seq: int,

@@ -31,6 +31,7 @@ ApplyFn = Callable[[Params, jax.Array, int | jax.Array], jax.Array]
 __all__ = [
     "Schedule",
     "SlotSchedule",
+    "chunk_bounds",
     "run_sampling_level",
     "run_batch_level",
     "run",
@@ -38,6 +39,21 @@ __all__ = [
     "TrafficModel",
     "traffic_model",
 ]
+
+
+def chunk_bounds(n: int, chunk: int) -> tuple[tuple[int, int], ...]:
+    """Partition ``n`` voxels into fixed-``chunk`` slices: ``(start, stop)``
+    pairs, the last slice short (``stop - start < chunk``) when ``chunk``
+    does not divide ``n``.
+
+    The one chunking rule shared by the direct ``engine.predict_volume``
+    path and the serving pool's voxel-chunk work items — both zero-pad each
+    slice to exactly ``chunk`` rows before the fused launch, which is what
+    makes the pooled scan bitwise-identical to the direct path."""
+    if n < 1 or chunk < 1:
+        raise ValueError(f"chunk_bounds needs n >= 1, chunk >= 1 "
+                         f"(got n={n}, chunk={chunk})")
+    return tuple((s, min(s + chunk, n)) for s in range(0, n, chunk))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +110,17 @@ class SlotSchedule:
         """Broadcast a per-slot vector [max_slots] to per-row [rows]
         (e.g. per-slot decode positions -> per-row cache positions)."""
         return jnp.tile(jnp.asarray(per_slot), (self.n_masks,))
+
+    def admits(self, other: "SlotSchedule") -> None:
+        """Pool-admission hook for voxel-chunk work items: a PackedPlan's
+        ``plan.slot_schedule(max_slots)`` must coincide with the pool's own
+        layout — the scan's sample axis is the pool's mask axis, so the
+        batch-level (sample-outer) schedule covers resident LM *and* voxel
+        work with one loop order. Raises ValueError on mismatch."""
+        if self != other:
+            raise ValueError(
+                f"plan sample axis does not map onto the pool layout: "
+                f"plan {other} vs pool {self} (n_masks must match)")
 
     def decode_traffic(self, d_in: int, k_hidden: int, d_out: int,
                        bytes_per_el: int = 2) -> TrafficModel:

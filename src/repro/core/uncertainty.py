@@ -19,6 +19,7 @@ __all__ = [
     "REL_UNC_EPS",
     "predictive_moments",
     "relative_uncertainty",
+    "token_posterior",
     "rmse",
     "UncertaintyRequirements",
     "RequirementReport",
@@ -46,6 +47,27 @@ def relative_uncertainty(samples: jax.Array, axis: int = 0,
     """Paper's metric: std / |mean| per prediction (relative variance)."""
     mean, std = predictive_moments(samples, axis=axis)
     return std / jnp.maximum(jnp.abs(mean), eps)
+
+
+def token_posterior(logits: jax.Array, n: int
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Mask-sample posterior of one LM serving step: logits [n*b, V]
+    (mask-major rows) -> (mean log-probs [b, V], relative uncertainty of
+    the argmax token [b]).
+
+    The serving-side instantiation of the paper's metric — shared by the
+    per-op steps (serving/server.posterior delegates here), the bucketed
+    fused prefill runner (core.plan.compile_prefill_step) and the in-kernel
+    Welford epilogue's reference (kernels/fused_plan/ref.welford_posterior
+    matches this math). n=1 degenerates to plain log-probs with zero
+    uncertainty."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    mean, std = predictive_moments(logp.reshape(n, -1, logp.shape[-1]))
+    tok = jnp.argmax(mean, -1)
+    std_t = jnp.take_along_axis(std, tok[:, None], -1)[:, 0]
+    mean_t = jnp.take_along_axis(mean, tok[:, None], -1)[:, 0]
+    rel = std_t / jnp.maximum(jnp.abs(mean_t), REL_UNC_EPS)
+    return mean, rel
 
 
 def rmse(pred: jax.Array, target: jax.Array, axis=None) -> jax.Array:

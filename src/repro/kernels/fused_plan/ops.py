@@ -18,6 +18,7 @@ from repro import compat
 from repro.kernels.fused_plan import ref as _ref
 from repro.kernels.fused_plan.ref import (FusedDecodeSpec,
                                           FusedPlanUnsupported, FusedSpec,
+                                          check_prefill_paddable,
                                           param_slots)
 from repro.kernels.pad import pad_to as _pad_to
 
@@ -27,7 +28,8 @@ _kernel = compat.import_pallas_kernel("repro.kernels.fused_plan.kernel")
 
 __all__ = ["fused_plan", "fused_vmem_bytes", "FusedPlanUnsupported",
            "VMEM_MOMENTS_LIMIT", "KERNEL_BACKEND",
-           "fused_decode", "fused_decode_vmem_bytes"]
+           "fused_decode", "fused_decode_vmem_bytes",
+           "check_prefill_paddable"]
 
 #: Resident-footprint cap for the moments mode (all packed weights + scratch
 #: must sit in VMEM at once — the paper's on-chip-weights regime). Plans past

@@ -188,6 +188,31 @@ def cache_reset_rows(pool, row_mask: jax.Array):
     return compat.tree_map_with_path(reset, pool)
 
 
+def cache_trim_positions(caches, length):
+    """Invalidate every cache entry at position >= ``length``: kpos to -1,
+    K/V to zero — exactly the init-cache state of those slots.
+
+    The bucketed-prefill epilogue: a prompt zero-padded to a bucket writes
+    (garbage) K/V for the pad tail; trimming makes the caches bitwise
+    identical to an exact-length prefill's. Assumes slot == position in
+    every KV leaf (global-attention caches with ``s <= smax``, which is the
+    only layout the bucketed prefill lowering admits — rolling local-window
+    caches and recurrent state are rejected upstream by
+    ``core.plan.prefill_fused_spec``). ``length`` may be traced."""
+    from repro import compat
+    n = jnp.asarray(length, jnp.int32)
+
+    def trim(path, leaf):
+        if "kpos" in jax.tree_util.keystr(path):
+            keep = jnp.arange(leaf.shape[-1]) < n          # [smax]
+            return jnp.where(keep, leaf, -1)
+        # k/v: [reps, B, hkv, smax, dh] — slot axis is -2
+        keep = (jnp.arange(leaf.shape[-2]) < n)[:, None]
+        return jnp.where(keep, leaf, jnp.zeros((), leaf.dtype))
+
+    return compat.tree_map_with_path(trim, caches)
+
+
 # ---------------------------------------------------------------------------
 # rope helpers
 # ---------------------------------------------------------------------------
@@ -499,10 +524,20 @@ def forward(cfg: ModelConfig, params: Params, batch: Params,
 
 def prefill(cfg: ModelConfig, params: Params, batch: Params,
             max_seq: int | None = None,
-            mask_ids: jax.Array | None = None):
+            mask_ids: jax.Array | None = None,
+            last_index: jax.Array | None = None):
     """Prefill: consume the prompt, return (last-token logits [B,V], caches).
 
-    max_seq sizes the KV caches (defaults to prompt length)."""
+    max_seq sizes the KV caches (defaults to prompt length).
+
+    ``last_index`` (scalar, may be traced) selects which position's logits
+    to return instead of the literal last — the bucketed-prefill form,
+    where the prompt is zero-padded to a fixed bucket length and the true
+    last token sits at ``length - 1``. Causal attention makes position
+    ``last_index`` blind to the pad tail, so the gathered logits are
+    bitwise those of an exact-length prefill; pair with
+    :func:`cache_trim_positions` to also clear the pad tail's cache
+    entries."""
     x = _embed_in(cfg, params, batch)
     b, s = x.shape[:2]
     if cfg.bayesian and mask_ids is None:
@@ -513,7 +548,12 @@ def prefill(cfg: ModelConfig, params: Params, batch: Params,
     rope = _rope(cfg, pos)
     x, new_caches, _ = _run_stack(cfg, params, x, mode="prefill", rope=rope,
                                   mask_ids=mask_ids, caches=caches)
-    x = layers.norm_apply(params["final_norm"], x[:, -1:, :], cfg.norm)
+    if last_index is None:
+        x = x[:, -1:, :]
+    else:
+        x = jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(last_index, jnp.int32), 1, axis=1)
+    x = layers.norm_apply(params["final_norm"], x, cfg.norm)
     return layers.lm_head(params["embed"], x)[:, 0], new_caches
 
 

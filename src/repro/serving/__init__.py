@@ -1,7 +1,8 @@
 from repro.serving.engine import (  # noqa: F401
-    ServeConfig, generate, serve_uncertain, uncertainty_decode_step)
+    ServeConfig, generate, plan_chunk_runner, predict_packed, predict_volume,
+    serve_uncertain, uncertainty_decode_step)
 from repro.serving.metrics import (  # noqa: F401
     MetricsCollector, RequestTimeline, ServingSummary)
 from repro.serving.server import (  # noqa: F401
     BayesianLMServer, QueueFullError, Request, RequestState, ServerConfig,
-    StepFns, step_fns)
+    StepFns, VoxelScanRequest, WorkItem, step_fns)

@@ -30,12 +30,13 @@ either path (tests/test_serving_server.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import plan as plan_lib
+from repro.core import scheduler as scheduler_lib
 from repro.core import uncertainty as unc_lib
 from repro.models.model import Model
 from repro.serving import server as server_lib
@@ -44,7 +45,8 @@ from repro.serving.server import mesh_scope
 Params = dict[str, Any]
 
 __all__ = ["ServeConfig", "generate", "uncertainty_decode_step",
-           "serve_uncertain", "predict_packed", "predict_volume"]
+           "serve_uncertain", "plan_chunk_runner", "predict_packed",
+           "predict_volume"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +79,60 @@ def _expand_for_masks(x: jax.Array, n: int) -> jax.Array:
     return jnp.tile(x, (n,) + (1,) * (x.ndim - 1))
 
 
+def plan_chunk_runner(plan: plan_lib.PackedPlan, *,
+                      backend: str | None = None,
+                      fused: bool | None = None):
+    """Build the per-chunk moments executor for one compiled PackedPlan:
+    a callable ``xc [chunk, D] -> (mean [chunk, d_out], std)``.
+
+    This is the ONE runner both voxel-serving paths share — the direct
+    :func:`predict_packed`/:func:`predict_volume` stream and the server's
+    pooled :class:`repro.serving.server.VoxelScanRequest` work items
+    (``server.submit_scan``). Sharing the callable composition (same fused
+    executor, same per-op fallback, same chunk padding rule upstream) is
+    what makes pooled scan results bitwise-identical to the direct path.
+
+    ``fused`` selects the executor exactly like ``predict_packed(fused=)``:
+    ``True`` requires the whole-plan megakernel with the in-kernel moments
+    epilogue and surfaces :class:`plan_lib.FusedPlanUnsupported`; ``False``
+    forces the per-op path (one masked-FFN launch per PackedPair, then
+    ``uncertainty.predictive_moments``); ``None`` (default) tries fused and
+    falls back per-op — at build when the plan has no fused lowering, or at
+    the first apply when the moments-mode VMEM-residency guard fires (trace
+    time; every chunk shares one shape, so the choice is made once and is
+    deterministic across chunks)."""
+    def per_op(xc):
+        return unc_lib.predictive_moments(
+            plan_lib.execute(plan, xc, backend=backend))
+
+    if fused is False:
+        return per_op
+    try:
+        run = plan_lib.fused_executor(plan, moments=True, backend=backend)
+    except plan_lib.FusedPlanUnsupported:
+        if fused:
+            raise
+        return per_op
+    if fused:
+        return run
+
+    state: dict[str, Callable] = {}
+
+    def runner(xc):
+        fn = state.get("fn")
+        if fn is not None:
+            return fn(xc)
+        try:
+            out = run(xc)          # VMEM guard fires here, at trace time
+        except plan_lib.FusedPlanUnsupported:
+            state["fn"] = per_op
+            return per_op(xc)
+        state["fn"] = run
+        return out
+
+    return runner
+
+
 def predict_packed(plan: plan_lib.PackedPlan, x: jax.Array, *,
                    chunk: int | None = None, backend: str | None = None,
                    fused: bool | None = None
@@ -95,54 +151,46 @@ def predict_packed(plan: plan_lib.PackedPlan, x: jax.Array, *,
     launch per PackedPair, then ``uncertainty.predictive_moments``);
     ``None`` (default) tries fused and falls back per-op when the plan has
     no fused lowering or its moments-mode footprint trips the VMEM guard.
-    ``chunk`` bounds the resident batch: a volume is
-    streamed through the cached fixed-shape executor in ``chunk``-row
-    slices (the last slice zero-padded, pad rows dropped), so the kernel
-    traces once and each chunk is exactly one fused launch. ``backend``
-    forwards to the executor (None -> the process-wide probe).
+    ``chunk`` bounds the resident batch: a volume is streamed through the
+    shared :func:`plan_chunk_runner` executor in ``chunk``-row slices
+    (``core.scheduler.chunk_bounds`` partition, the last slice zero-padded
+    to the chunk shape, pad rows dropped), so the kernel traces once and
+    each chunk is exactly one fused launch. ``backend`` forwards to the
+    executor (None -> the process-wide probe).
     """
     b = x.shape[0]
-    chunked = chunk is not None and chunk < b
-    if chunked:
-        pad = (-b) % chunk
-        xp = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]) \
-            if pad else x
-        xc = xp.reshape(-1, chunk, *x.shape[1:])
-
-    if fused is not False:
-        # Lowered once per call; the returned executor is the cached jitted
-        # runner, so every chunk is exactly one fused launch. The catch
-        # covers both no-fused-lowering and the moments-mode VMEM-residency
-        # guard (which fires from the first apply, at trace time).
-        try:
-            run = plan_lib.fused_executor(plan, moments=True,
-                                          backend=backend)
-            if not chunked:
+    if chunk is None or chunk >= b:
+        if fused is not False:
+            try:
+                run = plan_lib.fused_executor(plan, moments=True,
+                                              backend=backend)
                 return run(x)
-            moments = [run(xc[i]) for i in range(xc.shape[0])]
-            mean = jnp.concatenate([m for m, _ in moments])[:b]
-            std = jnp.concatenate([s for _, s in moments])[:b]
-            return mean, std
-        except plan_lib.FusedPlanUnsupported:
-            if fused:
-                raise
-
-    if not chunked:
+            except plan_lib.FusedPlanUnsupported:
+                if fused:
+                    raise
         return unc_lib.predictive_moments(
             plan_lib.execute(plan, x, backend=backend))
 
-    def body(_, xb):
-        return None, plan_lib.execute(plan, xb, backend=backend)
-
-    _, ys = jax.lax.scan(body, None, xc)           # [B/chunk, N, chunk, Do]
-    ys = jnp.moveaxis(ys, 1, 0).reshape(ys.shape[1], -1, ys.shape[-1])[:, :b]
-    return unc_lib.predictive_moments(ys)
+    # Streamed: the SAME runner + chunk partition + padding rule the pooled
+    # VoxelScanRequest path runs (server._advance_scan) — chunk for chunk,
+    # so the two paths agree bitwise.
+    runner = plan_chunk_runner(plan, backend=backend, fused=fused)
+    moments = []
+    for lo, hi in scheduler_lib.chunk_bounds(b, chunk):
+        xc = x[lo:hi]
+        if hi - lo < chunk:
+            pad = jnp.zeros((chunk - (hi - lo),) + x.shape[1:], x.dtype)
+            xc = jnp.concatenate([xc, pad])
+        moments.append(runner(xc))
+    mean = jnp.concatenate([m for m, _ in moments])[:b]
+    std = jnp.concatenate([s for _, s in moments])[:b]
+    return mean, std
 
 
 def predict_volume(plan: plan_lib.PackedPlan, volume: jax.Array, *,
                    chunk: int = 4096, backend: str | None = None,
-                   fused: bool | None = None
-                   ) -> tuple[jax.Array, jax.Array]:
+                   fused: bool | None = None, server=None,
+                   priority: int = 0) -> tuple[jax.Array, jax.Array]:
     """Stream a clinical scan through the fused executor.
 
     volume [..., D] (e.g. ``[X, Y, Z, n_bvalues]``) -> (mean, std), each
@@ -151,13 +199,27 @@ def predict_volume(plan: plan_lib.PackedPlan, volume: jax.Array, *,
     the chunk shape so every slice reuses the one cached fused executor,
     pad voxels unpadded on the way out), and reshaped back to the scan's
     spatial layout — the ROADMAP's volume-serving follow-on at engine level.
-    """
+
+    With ``server=`` (a :class:`repro.serving.server.BayesianLMServer`)
+    this becomes a thin pool client: the scan is submitted as one
+    voxel-chunk work item (``server.submit_scan`` — sharing the LM
+    requests' admission queue, backpressure and escalation policy at
+    ``priority``), the server drains, and the reassembled moments come back
+    bitwise-identical to the direct path (both paths run the one
+    :func:`plan_chunk_runner` executor over the same
+    ``core.scheduler.chunk_bounds`` partition)."""
     if volume.ndim < 2:
         raise ValueError(f"volume must be [..., D], got {volume.shape}")
     lead = volume.shape[:-1]
     x = volume.reshape(-1, volume.shape[-1])
-    mean, std = predict_packed(plan, x, chunk=chunk, backend=backend,
-                               fused=fused)
+    if server is not None:
+        rid = server.submit_scan(plan, x, chunk=chunk, priority=priority,
+                                 backend=backend, fused=fused)
+        server.run()
+        mean, std = server.result(rid).scan_moments()
+    else:
+        mean, std = predict_packed(plan, x, chunk=chunk, backend=backend,
+                                   fused=fused)
     return (mean.reshape(lead + (mean.shape[-1],)),
             std.reshape(lead + (std.shape[-1],)))
 

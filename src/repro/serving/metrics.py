@@ -6,6 +6,13 @@ occupancy/queue sample per engine step. ``summary()`` folds them into the
 numbers a capacity planner wants: tokens/s, p50/p99 request latency,
 time-to-first-token, mean slot occupancy and peak queue depth.
 
+Work items carry a modality label ("lm" or "voxel") so a mixed pool rolls
+up into one stream with per-modality splits: ``total_tokens``/``tokens_per_s``
+count LM emissions only, while voxel-chunk progress lands in
+``total_voxels``/``voxels_per_s`` (``on_token(units=...)`` with the chunk's
+valid voxel count). Occupancy keeps one total gauge (so single-modality
+numbers are unchanged) plus a voxel-slot sample per step.
+
 Timestamps come from an injectable clock so tests and trace replays can run
 on virtual time.
 """
@@ -32,6 +39,7 @@ class RequestTimeline:
     finish_t: float | None = None
     tokens_out: int = 0
     escalated: bool = False
+    modality: str = "lm"
 
     @property
     def latency(self) -> float | None:
@@ -67,11 +75,17 @@ class ServingSummary:
     mean_slot_occupancy: float     # occupied / max_slots, averaged over steps
     peak_queue_depth: int
     decode_steps: int
+    # -- per-modality split (all-LM runs leave the voxel side at zero/NaN) --
+    lm_requests: int = 0
+    voxel_requests: int = 0
+    total_voxels: int = 0
+    voxels_per_s: float = float("nan")
+    mean_voxel_occupancy: float = float("nan")   # voxel slots / max_slots
 
     def format(self) -> str:
         # Empty aggregates render as "n/a", never as a perfect-looking 0.0:
         # a run where nothing completed must not report "p99 0.0 ms".
-        return (
+        out = (
             f"requests          {self.completed}/{self.requests} completed"
             f" ({self.escalated} escalated)\n"
             f"throughput        {_fmt(self.tokens_per_s, width=9)} tok/s"
@@ -84,6 +98,16 @@ class ServingSummary:
             f"slot occupancy    {_fmt(self.mean_slot_occupancy, 100, 5)} %"
             f"   peak queue depth {self.peak_queue_depth}"
         )
+        if self.voxel_requests:
+            out += (
+                f"\nvoxel scans       {self.voxel_requests} scans"
+                f" ({self.lm_requests} lm requests alongside),"
+                f" {self.total_voxels} voxels\n"
+                f"voxel throughput  {_fmt(self.voxels_per_s, width=9)} vox/s"
+                f"   voxel occupancy "
+                f"{_fmt(self.mean_voxel_occupancy, 100, 5)} %"
+            )
+        return out
 
 
 def _fmt(v: float, scale: float = 1.0, width: int = 0, prec: int = 1) -> str:
@@ -107,17 +131,19 @@ class MetricsCollector:
         self.clock = clock
         self.timelines: dict[int, RequestTimeline] = {}
         self.occupancy_samples: list[int] = []
+        self.voxel_occupancy_samples: list[int] = []
         self.queue_depth_samples: list[int] = []
         self.decode_steps = 0
         self._start: float | None = None
         self._end: float | None = None
 
     # ---- lifecycle marks ---------------------------------------------------
-    def on_enqueue(self, req_id: int) -> None:
+    def on_enqueue(self, req_id: int, modality: str = "lm") -> None:
         t = self.clock()
         if self._start is None:
             self._start = t
-        self.timelines[req_id] = RequestTimeline(req_id, enqueue_t=t)
+        self.timelines[req_id] = RequestTimeline(req_id, enqueue_t=t,
+                                                 modality=modality)
 
     def on_admit(self, req_id: int) -> None:
         self.timelines[req_id].admit_t = self.clock()
@@ -130,10 +156,12 @@ class MetricsCollector:
         if tl.first_token_t is None:
             tl.first_token_t = self.clock()
 
-    def on_token(self, req_id: int) -> None:
+    def on_token(self, req_id: int, units: int = 1) -> None:
+        """One emission: an LM token, or a voxel chunk (units = its valid
+        voxel count)."""
         t = self._end = self.clock()   # wall extends through every emission,
         tl = self.timelines[req_id]    # so truncated runs aren't inflated
-        tl.tokens_out += 1
+        tl.tokens_out += units
         if tl.first_token_t is None:
             tl.first_token_t = t
 
@@ -143,9 +171,11 @@ class MetricsCollector:
         tl.escalated = escalated
 
     # ---- per-step gauges ---------------------------------------------------
-    def on_step(self, occupied_slots: int, queue_depth: int) -> None:
+    def on_step(self, occupied_slots: int, queue_depth: int,
+                voxel_occupied: int = 0) -> None:
         self.decode_steps += 1
         self.occupancy_samples.append(occupied_slots)
+        self.voxel_occupancy_samples.append(voxel_occupied)
         self.queue_depth_samples.append(queue_depth)
 
     # ---- rollup ------------------------------------------------------------
@@ -155,11 +185,16 @@ class MetricsCollector:
         lat = [t.latency for t in done]
         ttft = [t.ttft for t in done if t.ttft is not None]
         qw = [t.queue_wait for t in done if t.queue_wait is not None]
-        total_tokens = sum(t.tokens_out for t in tls)
+        lm = [t for t in tls if t.modality == "lm"]
+        vox = [t for t in tls if t.modality == "voxel"]
+        total_tokens = sum(t.tokens_out for t in lm)
+        total_voxels = sum(t.tokens_out for t in vox)
         wall = (self._end - self._start) \
             if self._start is not None and self._end is not None else 0.0
         occ = (float(np.mean(self.occupancy_samples)) / self.max_slots
                if self.occupancy_samples else float("nan"))
+        vocc = (float(np.mean(self.voxel_occupancy_samples)) / self.max_slots
+                if self.voxel_occupancy_samples else float("nan"))
         return ServingSummary(
             requests=len(tls),
             completed=len(done),
@@ -174,4 +209,10 @@ class MetricsCollector:
             mean_slot_occupancy=occ,
             peak_queue_depth=max(self.queue_depth_samples, default=0),
             decode_steps=self.decode_steps,
+            lm_requests=len(lm),
+            voxel_requests=len(vox),
+            total_voxels=total_voxels,
+            voxels_per_s=total_voxels / wall if wall > 0 and vox
+            else float("nan"),
+            mean_voxel_occupancy=vocc,
         )

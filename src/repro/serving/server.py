@@ -65,7 +65,8 @@ from repro.serving.metrics import MetricsCollector, ServingSummary
 
 Params = dict[str, Any]
 
-__all__ = ["mesh_scope", "QueueFullError", "Request", "RequestState", "ServerConfig",
+__all__ = ["mesh_scope", "QueueFullError", "Request", "VoxelScanRequest",
+           "WorkItem", "RequestState", "ServerConfig",
            "BayesianLMServer", "StepFns", "step_fns"]
 
 
@@ -91,15 +92,11 @@ def posterior(logits: jax.Array, n: int) -> tuple[jax.Array, jax.Array]:
     """Mask-sample posterior of one step: logits [n*b, V] (mask-major rows)
     -> (mean log-probs [b, V], relative uncertainty of the argmax token [b]).
 
-    n=1 degenerates to plain log-probs with zero uncertainty."""
-    logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
-    mean, std = unc_lib.predictive_moments(
-        logp.reshape(n, -1, logp.shape[-1]))
-    tok = jnp.argmax(mean, -1)
-    std_t = jnp.take_along_axis(std, tok[:, None], -1)[:, 0]
-    mean_t = jnp.take_along_axis(mean, tok[:, None], -1)[:, 0]
-    rel = std_t / jnp.maximum(jnp.abs(mean_t), unc_lib.REL_UNC_EPS)
-    return mean, rel
+    n=1 degenerates to plain log-probs with zero uncertainty. (Delegates to
+    ``core.uncertainty.token_posterior`` — the same math the bucketed
+    prefill runner jits in ``core.plan.compile_prefill_step``, so both
+    prefill forms emit bitwise-identical posteriors.)"""
+    return unc_lib.token_posterior(logits, n)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,13 +110,24 @@ class StepFns:
     ``fused_spec`` is the decode chain's static shape-key when the fused
     single-launch executor is selected, None when the per-op path is;
     ``fused_state["blocked"]`` records the pool-shape keys whose first call
-    tripped a kernel guard into the per-op fallback."""
+    tripped a kernel guard into the per-op fallback.
+
+    ``prefill_spec`` is the bucketed prefill's static shape-key when the
+    config admits padded length-bucket prefill (``core.plan.
+    prefill_fused_spec``), None when every admission takes the per-length
+    exact path. With a spec, ``prefill`` dispatches each call to the
+    smallest covering bucket (``core.plan.compile_prefill_step`` — one
+    trace per bucket, counted in ``core.plan.fused_trace_counts`` under
+    ``(spec, backend, "prefill", bucket, max_seq)``), zero-padding the
+    prompt and passing its true length as a traced scalar; lengths no
+    bucket covers fall back to the exact path."""
     n_samples: int
     prefill: Callable
     decode: Callable
     trace_counts: dict[str, int]
     fused_spec: object | None = None
     fused_state: dict | None = None
+    prefill_spec: object | None = None
 
     def fused_live(self) -> bool:
         """True iff the decode hot loop is running the fused executor and
@@ -130,7 +138,8 @@ class StepFns:
 
 
 def step_fns(model: Model, expand_masks: bool = True,
-             fused: bool | None = None) -> StepFns:
+             fused: bool | None = None,
+             prefill_buckets: tuple[int, ...] | None = None) -> StepFns:
     """Build (and cache per *config*) the jitted serving steps.
 
     expand_masks=True is the Bayesian serving form: rows are the mask
@@ -147,16 +156,30 @@ def step_fns(model: Model, expand_masks: bool = True,
     falls back per-op when the config has no fused lowering or the kernel
     tier's VMEM/alignment guards fire (at first call).
 
+    ``prefill_buckets`` selects the admission prefill's length-bucket set:
+    ``None`` (default) resolves to the power-of-two set per ``max_seq``
+    (``core.plan.prefill_buckets``), an explicit tuple is validated loudly,
+    and ``()`` disables bucketing — every admission then takes the
+    per-length exact prefill (the pre-bucketing behaviour). Configs with no
+    paddable lowering (MoE / recurrent / M-RoPE / local-attention rolling
+    caches) fall back to the exact path regardless.
+
     The cache key is the hashable ``ModelConfig`` (plus ``expand_masks`` /
-    ``fused``), never the ``Model`` instance — building steps must not pin
-    model objects for the life of the process. A bare config is accepted
-    in place of a model."""
+    ``fused`` / ``prefill_buckets``), never the ``Model`` instance —
+    building steps must not pin model objects for the life of the process.
+    A bare config is accepted in place of a model."""
     cfg = getattr(model, "cfg", model)
-    return _step_fns(cfg, bool(expand_masks), fused)
+    if prefill_buckets is not None:
+        prefill_buckets = tuple(int(b) for b in prefill_buckets)
+        if prefill_buckets and any(b < 1 for b in prefill_buckets):
+            raise ValueError(
+                f"non-positive prefill bucket in {prefill_buckets}")
+    return _step_fns(cfg, bool(expand_masks), fused, prefill_buckets)
 
 
 @functools.lru_cache(maxsize=None)
-def _step_fns(cfg, expand_masks: bool, fused: bool | None) -> StepFns:
+def _step_fns(cfg, expand_masks: bool, fused: bool | None,
+              buckets: tuple[int, ...] | None = None) -> StepFns:
     bayes = cfg.bayesian and expand_masks
     n = cfg.mask_samples if bayes else 1
     counts = {"prefill": 0, "decode": 0}
@@ -175,6 +198,36 @@ def _step_fns(cfg, expand_masks: bool, fused: bool | None) -> StepFns:
             mask_ids=_mask_ids(tokens.shape[0]))
         mean, rel = posterior(logits, n)
         return mean, rel, caches
+
+    exact_prefill = jax.jit(prefill_impl, static_argnames=("max_seq",))
+
+    # Bucketed prefill: bounded retraces — one trace per (bucket, max_seq)
+    # instead of one per distinct prompt length. Gated through the fused
+    # decode lowering (core.plan.prefill_fused_spec); () disables.
+    prefill_spec = None
+    if buckets is None or buckets:
+        try:
+            prefill_spec = plan_lib.prefill_fused_spec(
+                cfg, expand_masks=expand_masks)
+        except plan_lib.FusedPlanUnsupported:
+            prefill_spec = None
+
+    if prefill_spec is None:
+        prefill = exact_prefill
+    else:
+        def prefill(params, tokens, max_seq):
+            toks = jnp.asarray(tokens)
+            length = toks.shape[1]
+            bucket = plan_lib.prefill_bucket(length, max_seq, buckets)
+            if bucket is None:                 # custom set doesn't cover it
+                return exact_prefill(params, toks, max_seq=max_seq)
+            if bucket > length:
+                pad = jnp.zeros((toks.shape[0], bucket - length),
+                                toks.dtype)
+                toks = jnp.concatenate([toks, pad], axis=1)
+            step = plan_lib.compile_prefill_step(
+                cfg, bucket, max_seq, expand_masks=expand_masks)
+            return step(params, toks, jnp.int32(length))
 
     def decode_impl(params, caches, tokens, pos):
         counts["decode"] += 1
@@ -236,11 +289,12 @@ def _step_fns(cfg, expand_masks: bool, fused: bool | None) -> StepFns:
 
     return StepFns(
         n_samples=n,
-        prefill=jax.jit(prefill_impl, static_argnames=("max_seq",)),
+        prefill=prefill,
         decode=decode,
         trace_counts=counts,
         fused_spec=fspec if fused_step is not None else None,
-        fused_state=fused_state)
+        fused_state=fused_state,
+        prefill_spec=prefill_spec)
 
 
 # ---------------------------------------------------------------------------
@@ -255,21 +309,66 @@ class QueueFullError(RuntimeError):
 
 @dataclasses.dataclass(frozen=True)
 class Request:
-    """One generation request. ``priority``: lower value = served first."""
+    """One LM generation request (work-item kind ``"lm"``).
+    ``priority``: lower value = served first."""
     req_id: int
     tokens: tuple[int, ...]
     max_new_tokens: int
     priority: int = 0
 
+    kind = "lm"
+
+
+@dataclasses.dataclass(frozen=True)
+class VoxelScanRequest:
+    """One clinical-scan request (work-item kind ``"voxel"``): a flattened
+    voxel batch served through the pool one fixed-size chunk per engine
+    step.
+
+    ``x`` is the scan's ``[n_voxels, D]`` signal matrix; ``bounds`` the
+    ``core.scheduler.chunk_bounds`` partition; ``runner`` the per-chunk
+    moments executor (``engine.plan_chunk_runner`` — the SAME callable
+    composition the direct ``engine.predict_volume`` path runs, which is
+    what makes pooled results bitwise-identical to the direct path). A
+    resident scan occupies one slot and advances one chunk per ``step()``;
+    preemption (deprioritize) re-queues it and it resumes at its next
+    unprocessed chunk, so chunks of one scan never complete out of order.
+    """
+    req_id: int
+    x: Any
+    chunk: int
+    bounds: tuple[tuple[int, int], ...]
+    runner: Callable
+    priority: int = 0
+
+    kind = "voxel"
+
+    @property
+    def n_voxels(self) -> int:
+        return self.x.shape[0]
+
+
+#: A pool work item — both kinds share the priority queue, the
+#: ``max_queue`` backpressure, the escalation-policy surface and the
+#: metrics stream (per-modality labels).
+WorkItem = Request | VoxelScanRequest
+
 
 @dataclasses.dataclass
 class RequestState:
-    """Mutable serving state + final result of one request.
+    """Mutable serving state + final result of one work item.
 
     status: queued -> running -> done (or "escalated" when the uncertainty
     policy terminated it early; "deprioritize" preemption bounces it back
-    to queued)."""
-    request: Request
+    to queued).
+
+    LM items fill ``generated``/``pending``; voxel items fill
+    ``chunk_results`` (per-chunk ``(mean, std)`` device arrays, strictly in
+    chunk order — the resume cursor is ``len(chunk_results)``).
+    ``uncertainty``/``flags`` hold per-token rel-unc for LM items and
+    per-chunk max voxel rel-unc for scans; the escalation policy reads them
+    identically."""
+    request: WorkItem
     status: str = "queued"
     slot: int | None = None
     effective_priority: int = 0
@@ -282,6 +381,11 @@ class RequestState:
     pending: int | None = None    # next token to feed through decode
     pending_unc: float = 0.0      # rel-unc of pending (from the step that
                                   # chose it; recorded when it is emitted)
+    chunk_results: list = dataclasses.field(default_factory=list)
+
+    @property
+    def kind(self) -> str:
+        return self.request.kind
 
     @property
     def next_pos(self) -> int:
@@ -289,6 +393,22 @@ class RequestState:
         (invariant across preemption — re-prefill re-encodes exactly the
         first ``next_pos`` positions)."""
         return len(self.request.tokens) + len(self.generated)
+
+    def scan_moments(self):
+        """Reassemble a finished scan: concatenate the per-chunk moments,
+        strip the zero-pad tail -> (mean [n_voxels, d_out], std)."""
+        if self.kind != "voxel":
+            raise ValueError(f"work item {self.request.req_id} is "
+                             f"{self.kind}, not a voxel scan")
+        if self.status != "done":
+            raise ValueError(
+                f"scan {self.request.req_id} is {self.status}; only "
+                f"completed scans reassemble (escalation policy "
+                f"'terminate' leaves partial results in chunk_results)")
+        b = self.request.n_voxels
+        mean = jnp.concatenate([m for m, _ in self.chunk_results])[:b]
+        std = jnp.concatenate([s for _, s in self.chunk_results])[:b]
+        return mean, std
 
 
 # ---------------------------------------------------------------------------
@@ -309,12 +429,37 @@ class ServerConfig:
     fused: bool | None = None         # decode executor: True = require the
                                       # fused single-launch step, False =
                                       # per-op, None = auto w/ fallback
+    prefill_buckets: tuple[int, ...] | None = None
+                                      # admission prefill length buckets:
+                                      # None = power-of-two auto set,
+                                      # () = exact per-length prefill
 
     def __post_init__(self) -> None:
         if self.escalation_policy not in ("flag", "terminate",
                                           "deprioritize"):
             raise ValueError(
                 f"unknown escalation policy {self.escalation_policy!r}")
+        if self.max_slots < 1:
+            raise ValueError(f"max_slots {self.max_slots} < 1")
+        if self.max_queue < self.max_slots:
+            # fewer queue seats than slots means backpressure rejects
+            # traffic the pool could already hold — a misconfiguration
+            # that starves admission, caught here rather than at runtime.
+            raise ValueError(
+                f"max_queue {self.max_queue} < max_slots {self.max_slots}: "
+                f"the admission queue must at least cover the pool")
+        if self.max_prompt_len < 1 or self.max_new_tokens < 1:
+            raise ValueError(
+                f"max_prompt_len {self.max_prompt_len} and max_new_tokens "
+                f"{self.max_new_tokens} must be >= 1")
+        if self.prefill_buckets is not None:
+            # normalize (frozen dataclass: bypass immutability once) and
+            # validate loudly — a non-positive bucket would otherwise
+            # surface as a shape error deep inside the first admission
+            vals = tuple(int(b) for b in self.prefill_buckets)
+            object.__setattr__(self, "prefill_buckets", vals)
+            if vals:      # () = bucketing disabled, valid
+                plan_lib.prefill_buckets(self.max_seq, vals)
 
     @property
     def max_seq(self) -> int:
@@ -344,7 +489,8 @@ class BayesianLMServer:
             mesh
         self.schedule = scheduler_lib.SlotSchedule(model.cfg.mask_samples,
                                                    cfg.max_slots)
-        self.steps = step_fns(model, fused=cfg.fused)
+        self.steps = step_fns(model, fused=cfg.fused,
+                              prefill_buckets=cfg.prefill_buckets)
         # donate the pool on scatter (admission overwrites rows in place);
         # CPU has no donation support and warns, so only donate off-CPU
         self._scatter = jax.jit(transformer.cache_scatter_rows,
@@ -390,6 +536,42 @@ class BayesianLMServer:
         self.metrics.on_enqueue(rid)
         return rid
 
+    def submit_scan(self, plan, x, *, chunk: int = 4096, priority: int = 0,
+                    backend: str | None = None,
+                    fused: bool | None = None) -> int:
+        """Enqueue ONE clinical scan (a compiled ``core.plan.PackedPlan``
+        plus its flattened ``[n_voxels, D]`` voxel batch) as a voxel-chunk
+        work item; returns the request id.
+
+        The scan shares the LM requests' priority queue and ``max_queue``
+        backpressure; resident, it occupies one slot and advances one
+        zero-padded ``chunk``-voxel fused-moments launch per engine step —
+        the same per-chunk executor the direct ``engine.predict_volume``
+        path runs, so a completed scan's ``scan_moments()`` is
+        bitwise-identical to the direct path. Admission requires the plan's
+        sample axis to map onto the pool layout
+        (``plan.slot_schedule == pool schedule``, i.e. matching n_masks)."""
+        # lazy import: engine imports this module at its top level
+        from repro.serving import engine as engine_lib
+        self.schedule.admits(plan.slot_schedule(self.cfg.max_slots))
+        x = jnp.asarray(x)
+        if x.ndim != 2:
+            raise ValueError(f"scan must be [n_voxels, D], got {x.shape}")
+        if len(self._queue) >= self.cfg.max_queue:
+            raise QueueFullError(
+                f"admission queue full ({self.cfg.max_queue})")
+        bounds = scheduler_lib.chunk_bounds(x.shape[0], chunk)
+        runner = engine_lib.plan_chunk_runner(plan, backend=backend,
+                                              fused=fused)
+        rid = next(self._ids)
+        st = RequestState(VoxelScanRequest(rid, x, chunk, bounds, runner,
+                                           priority),
+                          effective_priority=priority)
+        self.states[rid] = st
+        heapq.heappush(self._queue, (priority, next(self._seq), rid))
+        self.metrics.on_enqueue(rid, modality="voxel")
+        return rid
+
     @property
     def queue_depth(self) -> int:
         return len(self._queue)
@@ -415,9 +597,17 @@ class BayesianLMServer:
 
     # ---- slot lifecycle ----------------------------------------------------
     def _admit(self, req_id: int, slot: int) -> None:
-        """Prefill one request and scatter its cache rows into the slot
-        group — in-flight slots are untouched and keep decoding."""
+        """Bind one queued work item to a free slot. LM requests prefill and
+        scatter their cache rows into the slot group — in-flight slots are
+        untouched and keep decoding. Voxel scans touch no pool cache (their
+        state is the chunk cursor); the slot is pure scheduling capacity."""
         st = self.states[req_id]
+        if st.kind == "voxel":
+            st.status, st.slot = "running", slot
+            self._slots[slot] = req_id
+            if st.preempts == 0:
+                self.metrics.on_admit(req_id)
+            return
         ctx = list(st.request.tokens) + st.generated   # re-entry after preempt
         xt = jnp.tile(jnp.asarray(ctx, jnp.int32)[None],
                       (self.schedule.n_masks, 1))
@@ -461,8 +651,11 @@ class BayesianLMServer:
 
     # ---- the engine iteration ----------------------------------------------
     def step(self) -> bool:
-        """Admit waiting requests into free slots, then run one jitted decode
-        step across the pool. Returns False once fully idle."""
+        """Admit waiting work items into free slots, then run one engine
+        iteration across the pool: one jitted decode step over every
+        resident LM slot (voxel/empty slots ride along at pos -1) plus one
+        fused-moments chunk launch per resident voxel scan. Returns False
+        once fully idle."""
         while self._queue and None in self._slots:
             _, _, rid = heapq.heappop(self._queue)
             self._admit(rid, self._slots.index(None))
@@ -470,26 +663,61 @@ class BayesianLMServer:
                     if rid is not None]
         if not occupied:
             return False
+        lm = [(s, r) for s, r in occupied
+              if self.states[r].kind == "lm"]
+        voxel = [(s, r) for s, r in occupied
+                 if self.states[r].kind == "voxel"]
+        self.metrics.on_step(len(occupied), len(self._queue),
+                             voxel_occupied=len(voxel))
 
-        # Inactive slots decode at pos -1: their (garbage) K/V write lands on
-        # a kpos=-1 slot, so unoccupied rows stay observably empty.
-        tok = np.zeros(self.cfg.max_slots, np.int32)
-        pos = np.full(self.cfg.max_slots, -1, np.int32)
-        for slot, rid in occupied:
-            st = self.states[rid]
-            tok[slot] = st.pending
-            pos[slot] = st.next_pos
-        rows_tok = self.schedule.row_values(jnp.asarray(tok))[:, None]
-        rows_pos = self.schedule.row_values(jnp.asarray(pos))
-        with mesh_scope(self.mesh):
-            mean, rel, self._caches = self.steps.decode(
-                self.params, self._caches, rows_tok, rows_pos)
-            nxt = np.asarray(jnp.argmax(mean, -1))
-        rel = np.asarray(rel)
-        self.metrics.on_step(len(occupied), len(self._queue))
-        for slot, rid in occupied:
-            self._absorb(self.states[rid], int(nxt[slot]), float(rel[slot]))
+        if lm:
+            # Inactive slots decode at pos -1: their (garbage) K/V write
+            # lands on a kpos=-1 slot, so unoccupied rows stay observably
+            # empty — voxel-occupied slots never touch the pool cache and
+            # ride along exactly like empty ones.
+            tok = np.zeros(self.cfg.max_slots, np.int32)
+            pos = np.full(self.cfg.max_slots, -1, np.int32)
+            for slot, rid in lm:
+                st = self.states[rid]
+                tok[slot] = st.pending
+                pos[slot] = st.next_pos
+            rows_tok = self.schedule.row_values(jnp.asarray(tok))[:, None]
+            rows_pos = self.schedule.row_values(jnp.asarray(pos))
+            with mesh_scope(self.mesh):
+                mean, rel, self._caches = self.steps.decode(
+                    self.params, self._caches, rows_tok, rows_pos)
+                nxt = np.asarray(jnp.argmax(mean, -1))
+            rel = np.asarray(rel)
+            for slot, rid in lm:
+                self._absorb(self.states[rid], int(nxt[slot]),
+                             float(rel[slot]))
+        for _, rid in voxel:
+            self._advance_scan(self.states[rid])
         return True
+
+    def _advance_scan(self, st: RequestState) -> None:
+        """Run one chunk of a resident scan through its per-chunk moments
+        executor and fold the result into scan state. The chunk slice is
+        zero-padded to exactly ``chunk`` rows — the same padding rule as
+        the direct ``engine.predict_volume`` path (``core.scheduler.
+        chunk_bounds``), so pooled and direct moments are bitwise equal."""
+        req = st.request
+        lo, hi = req.bounds[len(st.chunk_results)]
+        xc = req.x[lo:hi]
+        if hi - lo < req.chunk:
+            pad = jnp.zeros((req.chunk - (hi - lo),) + xc.shape[1:],
+                            xc.dtype)
+            xc = jnp.concatenate([xc, pad])
+        with mesh_scope(self.mesh):
+            mean, std = req.runner(xc)
+        # Chunk-level uncertainty signal for the shared escalation policy:
+        # the worst per-voxel relative uncertainty (max over valid voxels
+        # and output columns) — "any voxel uncertain => flag the chunk".
+        valid = hi - lo
+        rel = np.asarray(std[:valid]) / np.maximum(
+            np.abs(np.asarray(mean[:valid])), unc_lib.REL_UNC_EPS)
+        st.chunk_results.append((mean, std))
+        self._absorb_chunk(st, float(rel.max()), n_voxels=valid)
 
     def _absorb(self, st: RequestState, next_tok: int, rel: float) -> None:
         """Fold one decode result into request state: the pending token is
@@ -513,6 +741,31 @@ class BayesianLMServer:
         if st.escalated and cfg.escalation_policy == "terminate":
             self._finish(st, terminated=True)
         elif len(st.generated) >= st.request.max_new_tokens:
+            self._finish(st, terminated=False)
+        elif newly and cfg.escalation_policy == "deprioritize" and \
+                self._queue:
+            self._preempt(st)
+
+    def _absorb_chunk(self, st: RequestState, rel: float,
+                      n_voxels: int) -> None:
+        """Fold one completed scan chunk into work-item state — the voxel
+        twin of :meth:`_absorb`, driving the SAME escalation surface:
+        chunk-level flags feed the streak counter, ``terminate`` stops the
+        scan early (partial ``chunk_results``), ``deprioritize`` preempts
+        it between chunks (it resumes in order at ``len(chunk_results)``)."""
+        cfg = self.cfg
+        flagged = rel > cfg.uncertainty_threshold
+        st.uncertainty.append(rel)
+        st.flags.append(flagged)
+        st.flag_streak = st.flag_streak + 1 if flagged else 0
+        self.metrics.on_token(st.request.req_id, units=n_voxels)
+        newly = not st.escalated and \
+            st.flag_streak >= cfg.escalation_patience
+        if newly:
+            st.escalated = True
+        if st.escalated and cfg.escalation_policy == "terminate":
+            self._finish(st, terminated=True)
+        elif len(st.chunk_results) >= len(st.request.bounds):
             self._finish(st, terminated=False)
         elif newly and cfg.escalation_policy == "deprioritize" and \
                 self._queue:
