@@ -2,6 +2,8 @@
 
     PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [--fused]
                                                       [--mixed] [--seed S]
+                                                      [--trace-out F]
+                                                      [--metrics-out F]
 
 Replays one Poisson arrival trace through two serving paths at matched
 uncertainty output (same N-mask posterior per token):
@@ -36,6 +38,17 @@ into the SAME server pool (``submit_scan`` voxel-chunk work items)
 interleaved with the LM trace. Gates: the pooled scan moments must be
 bitwise-identical to the direct ``engine.predict_volume`` path, and the LM
 tokens must be unchanged by the co-resident scans.
+
+Every run also replays the trace once with span tracing enabled
+(``ServerConfig(trace=True)``) and gates on the observability overhead
+bounds: tokens (and scan moments, when mixed) bitwise-identical to the
+untraced replay, and zero added jit retraces (``retrace_total`` must not
+move). ``--trace-out`` exports that replay's event log as JSONL —
+``benchmarks/verify_obs.py`` replays it into a per-request lifecycle state
+machine — and ``--metrics-out`` writes the Prometheus text exposition.
+The JSON artifact gains a ``model_fidelity`` block (measured wall time
+joined against ``core.plan.decode_traffic``'s modeled bytes, per-stage
+split from ``decode_stage_traffic``) and the full registry snapshot.
 
 Full (non-smoke) runs via ``benchmarks/run.py`` emit the canonical
 ``BENCH_serving.json`` perf-trajectory artifact.
@@ -152,7 +165,8 @@ def _run_mixed(model, params, scfg, arrivals, prompts, max_new: int,
 
 
 def run(smoke: bool = False, quiet: bool = False, seed: int = 0,
-        mixed: bool = False) -> dict:
+        mixed: bool = False, trace_out: str | None = None,
+        metrics_out: str | None = None) -> dict:
     import dataclasses
 
     import jax
@@ -161,6 +175,9 @@ def run(smoke: bool = False, quiet: bool = False, seed: int = 0,
     from repro.configs import registry
     from repro.core import plan as plan_lib
     from repro.models import build_model
+    from repro.obs import crosscheck, export as obs_export
+    from repro.obs import registry as obs_registry
+    from repro.obs import trace as obs_trace
 
     n_requests = 4 if smoke else 16
     prompt_len = 6 if smoke else 8
@@ -214,6 +231,39 @@ def run(smoke: bool = False, quiet: bool = False, seed: int = 0,
             "summary": mx_summary,
         }
 
+    # -- traced replay: same trace, ServerConfig(trace=True) ----------------
+    # Gates the tentpole's overhead bounds: (a) tokens (and scan moments,
+    # when mixed) bitwise-identical with tracing on vs off — tracing never
+    # touches traced jax values; (b) zero additional jit retraces — the
+    # step_fns/jit caches key on shapes and config, never on the trace knob.
+    tracer = obs_trace.TRACER
+    tracer.configure(capacity=1 << 20)
+    rt0 = obs_registry.REGISTRY.value("retrace_total")
+    scfg_tr = dataclasses.replace(scfg, trace=True)
+    if mixed:
+        tr_outs, tr_scans, _, _ = _run_mixed(
+            model, params, scfg_tr, arrivals, prompts, max_new, smoke, seed)
+        trace_tokens_match = all(
+            np.array_equal(st, tt) for (st, _), (tt, _)
+            in zip(srv_outs, tr_outs)) and all(
+            np.array_equal(np.asarray(pm), np.asarray(dm)) and
+            np.array_equal(np.asarray(ps), np.asarray(ds))
+            for (pm, ps), (dm, ds) in tr_scans)
+    else:
+        tr_outs, _, _ = _run_server(model, params, scfg_tr, arrivals,
+                                    prompts, max_new)
+        trace_tokens_match = all(
+            np.array_equal(st, tt) for (st, _), (tt, _)
+            in zip(srv_outs, tr_outs))
+    tracer.disable()
+    trace_zero_retrace = \
+        obs_registry.REGISTRY.value("retrace_total") == rt0
+    trace_records = len(tracer.events())
+    if trace_out:
+        tracer.export_jsonl(trace_out)
+    if metrics_out:
+        pathlib.Path(metrics_out).write_text(obs_export.prometheus_text())
+
     total_tokens = sum(len(t) for t, _ in srv_outs)
     tokens_match = all(np.array_equal(bt, st) for (bt, _), (st, _)
                        in zip(base_outs, srv_outs))
@@ -241,6 +291,16 @@ def run(smoke: bool = False, quiet: bool = False, seed: int = 0,
                                           fused=False).total_bytes \
         / max_slots
 
+    # modeled-vs-measured cross-check: join the fused server leg's wall
+    # time against the analytic decode traffic (per-stage split included)
+    model_fidelity = crosscheck.model_fidelity(
+        measured_wall_s=srv_wall, n_units=total_tokens, unit="token",
+        step_traffic=plan_lib.decode_traffic(spec, rows, scfg.max_seq,
+                                             fused=True),
+        units_per_step=max_slots,
+        stages=plan_lib.decode_stage_traffic(spec, rows, scfg.max_seq,
+                                             fused=True))
+
     if not quiet:
         mode = "smoke" if smoke else "full"
         print(f"[{mode}] {n_requests} requests, Poisson mean gap "
@@ -264,6 +324,14 @@ def run(smoke: bool = False, quiet: bool = False, seed: int = 0,
         print(f"tokens identical: vs one-shot {tokens_match}, "
               f"fused vs per-op {fused_tokens_match}   "
               f"max |d rel-unc|: {max_unc_delta:.2e}")
+        print(f"traced replay: {trace_records} records, tokens bitwise == "
+              f"untraced: {trace_tokens_match}, zero added retraces: "
+              f"{trace_zero_retrace}")
+        print(f"model fidelity: measured/modeled "
+              f"{model_fidelity['ratio_measured_to_modeled']:.1f}x "
+              f"per {model_fidelity['unit']} "
+              f"(modeled for {model_fidelity['tpu']}; "
+              f"hbm bw fraction {model_fidelity['hbm_bw_fraction']:.2e})")
         print(summary.format())
         if mixed_res is not None:
             print(f"mixed pool: {mixed_res['n_scans']} scans "
@@ -290,8 +358,14 @@ def run(smoke: bool = False, quiet: bool = False, seed: int = 0,
         "summary": summary,
         "perop_summary": po_summary,
         "mixed": mixed_res,
+        "model_fidelity": model_fidelity,
+        "trace_records": trace_records,
+        "trace_tokens_match": trace_tokens_match,
+        "trace_zero_retrace": trace_zero_retrace,
+        "registry_snapshot": obs_registry.REGISTRY.snapshot(),
         "provenance": {
             **compat.version_summary(),
+            **obs_export.host_provenance(),
             "arch": cfg.arch_id, "n_layers": cfg.n_layers,
             "d_model": cfg.d_model, "d_ff": cfg.d_ff,
             "vocab": cfg.vocab_size, "n_masks": cfg.mask_samples,
@@ -335,6 +409,14 @@ def write_bench_json(out: dict, path: pathlib.Path = BENCH_JSON) -> dict:
         },
         "fused_decode_active": out["fused_active"],
         "tokens_identical_fused_vs_per_op": out["fused_tokens_match"],
+        "model_fidelity": out["model_fidelity"],
+        "trace": {
+            "records": out["trace_records"],
+            "tokens_bitwise_identical_vs_untraced":
+                out["trace_tokens_match"],
+            "zero_added_retraces": out["trace_zero_retrace"],
+        },
+        "registry_snapshot": out["registry_snapshot"],
     }
     if out.get("mixed") is not None:
         mx = out["mixed"]
@@ -366,8 +448,23 @@ def main() -> int:
     ap.add_argument("--seed", type=int, default=0,
                     help="trace seed (arrivals, prompts, scan volumes); "
                          "recorded in the JSON provenance")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the traced replay's span/event log as "
+                         "JSONL (benchmarks/verify_obs.py replays it)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the telemetry registry as Prometheus text "
+                         "exposition after the run")
     args = ap.parse_args()
-    res = run(smoke=args.smoke, seed=args.seed, mixed=args.mixed)
+    res = run(smoke=args.smoke, seed=args.seed, mixed=args.mixed,
+              trace_out=args.trace_out, metrics_out=args.metrics_out)
+    if not res["trace_tokens_match"]:
+        print("ERROR: tokens/moments changed when span tracing was "
+              "enabled (tracing must be bitwise-invisible)")
+        return 1
+    if not res["trace_zero_retrace"]:
+        print("ERROR: enabling span tracing added jit retraces "
+              "(retrace_total moved during the traced replay)")
+        return 1
     if not res["tokens_match"]:
         print("ERROR: server tokens diverged from one-shot serving")
         return 1

@@ -7,7 +7,15 @@ versions).
 Run from the repo root; expects results/dryrun_v1/{single,multi} (the
 archived sweep) next to results/dryrun. A no-op when the archive is absent —
 kept under benchmarks/ as the provenance record of how mixed-version dryrun
-tables were produced, not as part of any current pipeline."""
+tables were produced, not as part of any current pipeline.
+
+Provenance conventions have since grown: current ``BENCH_*.json`` artifacts
+(bench_serving / bench_ivim_packed) stamp git SHA + hostname
+(``repro.obs.export.host_provenance``), jax version + kernel backend
+(``repro.compat.version_summary``) and the full telemetry-registry snapshot
+(``repro.obs.registry.REGISTRY.snapshot()``) alongside the shape fields.
+The archived v1 cells predate all of that — ``probe_version`` is their only
+version mark, which is exactly why this script tags it on the way in."""
 
 import json
 import os

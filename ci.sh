@@ -19,6 +19,18 @@ if [[ -n "$violations" ]]; then
     exit 1
 fi
 
+# The serving hot path must take its wall clock from the one sanctioned
+# injectable source (repro.obs.trace.default_clock) — direct time.* calls
+# there bypass clock injection and break virtual-time trace replay.
+clock_violations=$(grep -rnE 'time\.(monotonic|perf_counter|time)\(' \
+    src/repro/serving --include='*.py' || true)
+if [[ -n "$clock_violations" ]]; then
+    echo "ERROR: direct time.* calls on the serving path (use" >&2
+    echo "repro.obs.trace.default_clock / the injectable clock):" >&2
+    echo "$clock_violations" >&2
+    exit 1
+fi
+
 # Tier-1 verify (ROADMAP.md): the whole suite, quiet, fail-fast off so the
 # summary shows every regression.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q
@@ -51,8 +63,17 @@ REPRO_KERNEL_BACKEND=pallas-interpret \
 REPRO_KERNEL_BACKEND=pallas-interpret \
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_serving --smoke --fused
 
-# Mixed-modality smoke: IVIM scans as voxel-chunk work items interleaved
-# into the same serving pool as the LM trace — exits nonzero if the pooled
-# scan moments are not bitwise-identical to the direct predict_volume path
-# or if co-resident scans perturb the LM tokens.
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_serving --smoke --mixed
+# Mixed-modality + observability smoke: IVIM scans as voxel-chunk work
+# items interleaved into the same serving pool as the LM trace, with the
+# traced replay exporting its JSONL span log and the Prometheus exposition.
+# The bench exits nonzero if the pooled scan moments are not
+# bitwise-identical to the direct predict_volume path, if co-resident scans
+# perturb the LM tokens, if enabling tracing changes tokens/moments, or if
+# it adds jit retraces; the verifier then replays the JSONL into a
+# per-request lifecycle state machine and parses the exposition.
+obs_dir=$(mktemp -d)
+trap 'rm -rf "$obs_dir"' EXIT
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_serving --smoke --mixed \
+    --trace-out "$obs_dir/trace.jsonl" --metrics-out "$obs_dir/metrics.prom"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.verify_obs \
+    --trace "$obs_dir/trace.jsonl" --metrics "$obs_dir/metrics.prom"

@@ -2,7 +2,8 @@
 per-token uncertainty, on any assigned architecture (reduced config).
 
     PYTHONPATH=src python examples/serve_uncertainty_lm.py \
-        [--arch qwen2-1.5b] [--tokens 12] [--server]
+        [--arch qwen2-1.5b] [--tokens 12] [--server] \
+        [--trace-out trace.jsonl] [--metrics-out metrics.prom]
 
 Every request is evaluated under N fixed Masksembles masks (no runtime RNG);
 the decode loop reports the relative uncertainty of each emitted token and
@@ -23,6 +24,12 @@ slot, one fused-moments chunk per engine step, sharing the LM requests'
 queue, backpressure and escalation policy. The example prints per-modality
 latency and uncertainty summaries — the paper's MRI workload and its LM
 analogue served by one scheduler.
+
+``--trace-out`` (with ``--server``) switches on the observability layer
+(``repro.obs``): every enqueue / admit / prefill / decode / token /
+escalation / finish lands in a JSONL span log that
+``benchmarks/verify_obs.py`` can replay; ``--metrics-out`` writes the
+telemetry registry as Prometheus text exposition.
 """
 
 import argparse
@@ -65,9 +72,18 @@ def main() -> None:
                     help="also submit a synthetic IVIM scan volume into the "
                          "same pool (--server mode): voxel chunks and LM "
                          "tokens share slots, queue and escalation policy")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="(--server mode) enable span tracing and write the "
+                         "request-lifecycle event log as JSONL")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="(--server mode) write the telemetry registry as "
+                         "Prometheus text exposition after the run")
     args = ap.parse_args()
     if args.scan and not args.server:
         raise SystemExit("--scan needs --server (the scan rides the pool)")
+    if (args.trace_out or args.metrics_out) and not args.server:
+        raise SystemExit("--trace-out/--metrics-out need --server (the "
+                         "one-shot engine has no request lifecycle)")
 
     cfg = registry.smoke_config(args.arch, mask_samples=args.n_masks)
     if not cfg.has_decode:
@@ -82,7 +98,8 @@ def main() -> None:
         server = BayesianLMServer(model, params, ServerConfig(
             max_slots=args.slots, max_prompt_len=8,
             max_new_tokens=args.tokens,
-            uncertainty_threshold=args.threshold))
+            uncertainty_threshold=args.threshold,
+            trace=bool(args.trace_out)))
         rids = [server.submit(p) for p in prompts]
         sid = None
         if args.scan:
@@ -128,6 +145,17 @@ def main() -> None:
         print(f"\n-- serving metrics ({args.slots} slots x "
               f"{args.n_masks} mask rows each) --")
         print(summary.format())
+        if args.trace_out:
+            from repro.obs import trace as obs_trace
+            n = obs_trace.TRACER.export_jsonl(args.trace_out)
+            print(f"\nwrote {n} trace records -> {args.trace_out}  "
+                  f"(verify: python -m benchmarks.verify_obs "
+                  f"--trace {args.trace_out})")
+        if args.metrics_out:
+            from repro.obs import export as obs_export
+            with open(args.metrics_out, "w") as f:
+                f.write(obs_export.prometheus_text())
+            print(f"wrote metrics exposition -> {args.metrics_out}")
         return
 
     prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,

@@ -52,7 +52,6 @@ activations are zero-preserving (relu(z)·m == relu(z·m) for binary m).
 
 from __future__ import annotations
 
-import collections
 import dataclasses
 import functools
 from typing import Any, Callable
@@ -66,6 +65,8 @@ from repro.core import scheduler as sched_lib
 from repro.core import uncertainty as unc_lib
 from repro.kernels.fused_plan import ref as fused_ref
 from repro.kernels.fused_plan.ref import FusedPlanUnsupported
+from repro.obs import registry as obs_registry
+from repro.obs import trace as obs_trace
 
 Params = dict[str, Any]
 
@@ -78,7 +79,7 @@ __all__ = [
     "lower_fused_decode", "compile_decode_step", "decode_fused_spec",
     "prefill_buckets", "prefill_bucket", "prefill_fused_spec",
     "compile_prefill_step",
-    "decode_traffic", "decode_modeled_latency",
+    "decode_traffic", "decode_stage_traffic", "decode_modeled_latency",
 ]
 
 #: The one activation-name table for the mask pipeline and the model specs
@@ -699,7 +700,34 @@ def lower_fused(plan: PackedPlan
 #: Trace counters of the cached fused executors, keyed by
 #: ``(spec, backend, moments)`` — incremented once per jit trace, so
 #: repeated same-shape ``predict_packed`` calls must leave them at 1.
-fused_trace_counts: collections.Counter = collections.Counter()
+#: A registry-backed :class:`repro.obs.registry.KeyedCounter` with the old
+#: bare-``collections.Counter`` mapping surface (compatibility alias), so
+#: it resets/snapshots/exposes with every other instrument
+#: (tests/conftest.py write-isolates it per test).
+fused_trace_counts = obs_registry.REGISTRY.keyed_counter(
+    "fused_trace_total",
+    "jit traces of the cached fused executors, by (spec, backend, stage)")
+
+_RETRACES = obs_registry.REGISTRY.counter(
+    "retrace_total", "jit traces of the cached plan executors",
+    labels=("stage", "backend"))
+_DISPATCH = obs_registry.REGISTRY.counter(
+    "kernel_dispatch_total",
+    "kernel-backend tier selected at executor trace time",
+    labels=("tier",))
+
+
+def _note_trace(stage: str, backend: str | None) -> None:
+    """Registry + tracer breadcrumbs of ONE jit trace of a cached executor.
+    Runs at trace time only — zero steady-state cost; an idle serving loop
+    must leave ``retrace_total`` flat (the no-retrace observable the
+    tracing-overhead gate in benchmarks/bench_serving.py checks)."""
+    from repro import compat
+    tier = backend if backend is not None else compat.kernel_backend()
+    _RETRACES.inc(stage=stage, backend=backend or "auto")
+    _DISPATCH.inc(tier=tier)
+    obs_trace.TRACER.event("retrace", stage=stage,
+                           backend=backend or "auto", tier=tier)
 
 
 @functools.lru_cache(maxsize=128)
@@ -712,6 +740,7 @@ def _fused_runner(spec: fused_ref.FusedSpec, backend: str | None,
 
     def run(x: jax.Array, params: tuple[jax.Array, ...]):
         fused_trace_counts[(spec, backend, moments)] += 1
+        _note_trace("fused_plan", backend)
         if backend == "xla":
             fn = (fused_ref.fused_moments_ref if moments
                   else fused_ref.fused_plan_ref)
@@ -970,6 +999,7 @@ def _decode_runner(cfg, expand_masks: bool, backend: str | None):
 
     def run(params, caches, tokens, pos):
         fused_trace_counts[(spec, backend, "decode")] += 1
+        _note_trace("decode", backend)
         from repro.models import layers
         rows = tokens.shape[0]
         p = jnp.asarray(pos, jnp.int32)
@@ -1099,6 +1129,7 @@ def _prefill_runner(cfg, expand_masks: bool, bucket: int, max_seq: int,
 
     def run(params, tokens, length):
         fused_trace_counts[(spec, backend, "prefill", bucket, max_seq)] += 1
+        _note_trace("prefill", backend)
         from repro.models import transformer
         rows = tokens.shape[0]
         ids = jnp.repeat(jnp.arange(n), rows // n) if bayes else None
@@ -1135,6 +1166,73 @@ def compile_prefill_step(cfg, bucket: int, max_seq: int, *,
                            int(max_seq), backend)[0]
 
 
+def decode_stage_traffic(spec: fused_ref.FusedDecodeSpec, rows: int,
+                         max_seq: int, bytes_per_el: int = 2, *,
+                         fused: bool = True
+                         ) -> dict[str, sched_lib.TrafficModel]:
+    """Per-stage split of :func:`decode_traffic`: one TrafficModel per
+    step kind (``norm``/``attn``/``ffn``/``dense`` — attn includes its
+    KV-cache bytes) plus an ``interstage`` entry holding the inter-launch
+    activation traffic and the launch count. Sums field-for-field to
+    :func:`decode_traffic` (asserted in tests/test_obs.py) — the
+    ``model_fidelity`` breakdown ``obs.crosscheck`` stamps into
+    BENCH_serving.json."""
+    d, v, n = spec.d_model, spec.vocab, spec.n_samples
+    b = rows // n
+    acc: dict[str, list[int]] = {}
+
+    def add(kind: str, w: int = 0, cache: int = 0, fl: int = 0) -> None:
+        cur = acc.setdefault(kind, [0, 0, 0])
+        cur[0] += w
+        cur[1] += cache
+        cur[2] += fl
+
+    layers_l = 0
+    for st in spec.steps:
+        if st.kind == "norm":
+            add("norm", w=d * (2 if st.shared_bias else 1))
+        elif st.kind == "attn":
+            hh, hkv, dh = st.n_heads, st.n_kv_heads, st.head_dim
+            smax = min(st.window, max_seq) if st.window else max_seq
+            proj = d * hh * dh + 2 * d * hkv * dh + hh * dh * d
+            if st.qkv_bias:
+                proj += hh * dh + 2 * hkv * dh
+            add("attn", w=proj,
+                cache=rows * hkv * smax * dh * 2 + rows * smax
+                + rows * hkv * dh * 2 + rows,
+                fl=2 * rows * proj + 4 * rows * hh * dh * (smax + 1))
+            layers_l += 1
+        elif st.kind == "ffn":
+            mats = 3 if st.gated else 2
+            if st.per_sample:
+                add("ffn", w=n * mats * d * st.d_hidden,
+                    fl=2 * rows * mats * d * st.d_hidden)
+            else:
+                w = mats * d * st.d_hidden \
+                    + (st.d_hidden + d if st.ffn_bias else 0)
+                if st.masked:
+                    w += n * st.d_hidden
+                add("ffn", w=w, fl=2 * rows * mats * d * st.d_hidden)
+        elif st.kind == "dense":
+            add("dense",
+                w=st.d_in * st.d_out + (st.d_out if st.shared_bias else 0),
+                fl=2 * rows * st.d_in * st.d_out)
+    if fused:
+        act_el = rows * d + b * v + b
+        launches = 1
+    else:
+        act_el = layers_l * 4 * rows * d + rows * d + 2 * rows * v \
+            + b * v + b
+        launches = 2 * layers_l + 2
+    out = {kind: sched_lib.TrafficModel(
+        weight_bytes=(w + cache) * bytes_per_el, act_bytes=0, flops=fl,
+        weight_loads=0) for kind, (w, cache, fl) in acc.items()}
+    out["interstage"] = sched_lib.TrafficModel(
+        weight_bytes=0, act_bytes=act_el * bytes_per_el, flops=0,
+        weight_loads=launches)
+    return out
+
+
 def decode_traffic(spec: fused_ref.FusedDecodeSpec, rows: int, max_seq: int,
                    bytes_per_el: int = 2, *, fused: bool = True
                    ) -> sched_lib.TrafficModel:
@@ -1149,50 +1247,16 @@ def decode_traffic(spec: fused_ref.FusedDecodeSpec, rows: int, max_seq: int,
     launch count: ``weight_loads`` holds launches per token (per-op:
     ``2·L + 2`` — attention and FFN per layer, lm head, posterior; fused:
     1), each priced at ``kernel_fill_us`` by
-    :func:`decode_modeled_latency`.
+    :func:`decode_modeled_latency`. The per-stage split this aggregates is
+    :func:`decode_stage_traffic`.
     """
-    d, v, n = spec.d_model, spec.vocab, spec.n_samples
-    b = rows // n
-    w_el = flops = cache_el = 0
-    layers_l = 0
-    for st in spec.steps:
-        if st.kind == "norm":
-            w_el += d * (2 if st.shared_bias else 1)
-        elif st.kind == "attn":
-            hh, hkv, dh = st.n_heads, st.n_kv_heads, st.head_dim
-            smax = min(st.window, max_seq) if st.window else max_seq
-            proj = d * hh * dh + 2 * d * hkv * dh + hh * dh * d
-            if st.qkv_bias:
-                proj += hh * dh + 2 * hkv * dh
-            w_el += proj
-            cache_el += rows * hkv * smax * dh * 2 + rows * smax \
-                + rows * hkv * dh * 2 + rows
-            flops += 2 * rows * proj + 4 * rows * hh * dh * (smax + 1)
-            layers_l += 1
-        elif st.kind == "ffn":
-            mats = 3 if st.gated else 2
-            if st.per_sample:
-                w_el += n * mats * d * st.d_hidden
-                flops += 2 * rows * mats * d * st.d_hidden
-            else:
-                w_el += mats * d * st.d_hidden \
-                    + (st.d_hidden + d if st.ffn_bias else 0)
-                if st.masked:
-                    w_el += n * st.d_hidden
-                flops += 2 * rows * mats * d * st.d_hidden
-        elif st.kind == "dense":
-            w_el += st.d_in * st.d_out + (st.d_out if st.shared_bias else 0)
-            flops += 2 * rows * st.d_in * st.d_out
-    if fused:
-        act_el = rows * d + b * v + b
-        launches = 1
-    else:
-        act_el = layers_l * 4 * rows * d + rows * d + 2 * rows * v \
-            + b * v + b
-        launches = 2 * layers_l + 2
+    stages = decode_stage_traffic(spec, rows, max_seq, bytes_per_el,
+                                  fused=fused)
     return sched_lib.TrafficModel(
-        weight_bytes=(w_el + cache_el) * bytes_per_el,
-        act_bytes=act_el * bytes_per_el, flops=flops, weight_loads=launches)
+        weight_bytes=sum(t.weight_bytes for t in stages.values()),
+        act_bytes=sum(t.act_bytes for t in stages.values()),
+        flops=sum(t.flops for t in stages.values()),
+        weight_loads=sum(t.weight_loads for t in stages.values()))
 
 
 def decode_modeled_latency(spec: fused_ref.FusedDecodeSpec, rows: int,

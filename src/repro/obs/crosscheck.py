@@ -1,0 +1,87 @@
+"""Modeled-vs-measured perf cross-check.
+
+The repo prices its hot paths analytically (``core.plan.traffic()`` /
+``decode_traffic()`` -> ``core.scheduler.TrafficModel``) but until now no
+committed artifact reconciled those modeled bytes against measured wall
+time. :func:`model_fidelity` does the join: given a measured wall clock
+over N served units (tokens or voxels) and the modeled traffic of one
+launch/step, it emits the block ``benchmarks/bench_serving.py`` and
+``bench_ivim_packed.py`` stamp into ``BENCH_serving.json`` /
+``BENCH_plan.json``.
+
+Reading the block: ``ratio_measured_to_modeled`` ~ 1 means the roofline
+model explains the measurement; >> 1 means the run was nowhere near the
+modeled hardware — expected off-TPU, where the model prices a v5e while
+the measurement ran on CPU (or the Pallas interpreter). The point is the
+*trajectory*: the committed ratio is the baseline future PRs move.
+
+Not imported by ``obs/__init__`` at package-import time: this module pulls
+in ``repro.core``, which itself imports ``obs.registry`` — access it as
+``from repro.obs import crosscheck``.
+"""
+
+from __future__ import annotations
+
+from repro.core import latency_model
+from repro.core.scheduler import TrafficModel
+
+__all__ = ["roofline_seconds", "model_fidelity"]
+
+
+def roofline_seconds(tm: TrafficModel,
+                     tpu: latency_model.TpuSpec = latency_model.V5E
+                     ) -> float:
+    """Eq.-2-analogue latency of one launch set: roofline over the modeled
+    traffic plus one ``kernel_fill_us`` per launch (``weight_loads`` holds
+    the launch count in the decode/fused pricing)."""
+    return max(tm.flops / tpu.peak_flops_bf16, tm.total_bytes / tpu.hbm_bw) \
+        + tm.weight_loads * tpu.kernel_fill_us * 1e-6
+
+
+def model_fidelity(*, measured_wall_s: float, n_units: int,
+                   step_traffic: TrafficModel, units_per_step: int,
+                   unit: str = "token",
+                   tpu: latency_model.TpuSpec = latency_model.V5E,
+                   stages: dict[str, TrafficModel] | None = None) -> dict:
+    """Join measured wall time against modeled traffic -> the JSON-safe
+    ``model_fidelity`` block.
+
+    ``step_traffic`` prices ONE step/launch that serves ``units_per_step``
+    units; ``measured_wall_s`` covers ``n_units`` served units end to end.
+    ``stages`` (optional) is a named decomposition of the step's traffic
+    (e.g. ``core.plan.decode_stage_traffic``) — each stage gets its own
+    modeled seconds and byte share."""
+    n_units = max(1, int(n_units))
+    units_per_step = max(1, int(units_per_step))
+    modeled_step_s = roofline_seconds(step_traffic, tpu)
+    measured_per_unit = measured_wall_s / n_units
+    modeled_per_unit = modeled_step_s / units_per_step
+    bytes_per_unit = step_traffic.total_bytes / units_per_step
+    block = {
+        "unit": unit,
+        "n_units": n_units,
+        "tpu": tpu.name,
+        "measured_s_per_unit": measured_per_unit,
+        "modeled_s_per_unit": modeled_per_unit,
+        "ratio_measured_to_modeled": (
+            measured_per_unit / modeled_per_unit if modeled_per_unit > 0
+            else float("nan")),
+        "modeled_bytes_per_unit": bytes_per_unit,
+        "modeled_flops_per_unit": step_traffic.flops / units_per_step,
+        "achieved_bytes_per_s": (
+            bytes_per_unit / measured_per_unit if measured_per_unit > 0
+            else float("nan")),
+        "hbm_bw_fraction": (
+            bytes_per_unit / measured_per_unit / tpu.hbm_bw
+            if measured_per_unit > 0 else float("nan")),
+    }
+    if stages:
+        total_bytes = max(1, sum(t.total_bytes for t in stages.values()))
+        block["stages"] = {
+            name: {
+                "modeled_bytes": t.total_bytes,
+                "modeled_flops": t.flops,
+                "modeled_s": roofline_seconds(t, tpu),
+                "byte_share": t.total_bytes / total_bytes,
+            } for name, t in stages.items()}
+    return block

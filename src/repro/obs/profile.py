@@ -1,0 +1,41 @@
+"""Optional ``jax.profiler`` trace annotations, guarded to zero overhead.
+
+``annotate("serving.step")`` returns a ``jax.profiler.TraceAnnotation``
+when profiling is enabled (``REPRO_PROFILE=1`` in the environment, or
+``enable()``), else a ``nullcontext`` — so the serving hot loop can stay
+annotated permanently. Annotations wrap Python-side dispatch only and
+never enter a traced graph, so turning them on adds ZERO jit retraces —
+asserted via the ``retrace_total`` registry counter in
+tests/test_obs.py, which is exactly the observability this module is
+guarded by.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+
+__all__ = ["enabled", "enable", "disable", "annotate"]
+
+_state = {"enabled": os.environ.get("REPRO_PROFILE", "") not in ("", "0")}
+
+
+def enabled() -> bool:
+    return _state["enabled"]
+
+
+def enable() -> None:
+    _state["enabled"] = True
+
+
+def disable() -> None:
+    _state["enabled"] = False
+
+
+def annotate(name: str):
+    """Context manager: a profiler TraceAnnotation when enabled, else a
+    no-op (jax imported lazily so the guard costs one dict read)."""
+    if not _state["enabled"]:
+        return contextlib.nullcontext()
+    from jax.profiler import TraceAnnotation
+    return TraceAnnotation(name)

@@ -39,6 +39,7 @@ from repro.core import plan as plan_lib
 from repro.core import scheduler as scheduler_lib
 from repro.core import uncertainty as unc_lib
 from repro.models.model import Model
+from repro.obs import trace as obs_trace
 from repro.serving import server as server_lib
 from repro.serving.server import mesh_scope
 
@@ -112,6 +113,7 @@ def plan_chunk_runner(plan: plan_lib.PackedPlan, *,
     except plan_lib.FusedPlanUnsupported:
         if fused:
             raise
+        server_lib._note_fallback("build", "plan")
         return per_op
     if fused:
         return run
@@ -125,6 +127,7 @@ def plan_chunk_runner(plan: plan_lib.PackedPlan, *,
         try:
             out = run(xc)          # VMEM guard fires here, at trace time
         except plan_lib.FusedPlanUnsupported:
+            server_lib._note_fallback("trace", "plan")
             state["fn"] = per_op
             return per_op(xc)
         state["fn"] = run
@@ -212,14 +215,17 @@ def predict_volume(plan: plan_lib.PackedPlan, volume: jax.Array, *,
         raise ValueError(f"volume must be [..., D], got {volume.shape}")
     lead = volume.shape[:-1]
     x = volume.reshape(-1, volume.shape[-1])
-    if server is not None:
-        rid = server.submit_scan(plan, x, chunk=chunk, priority=priority,
-                                 backend=backend, fused=fused)
-        server.run()
-        mean, std = server.result(rid).scan_moments()
-    else:
-        mean, std = predict_packed(plan, x, chunk=chunk, backend=backend,
-                                   fused=fused)
+    with obs_trace.TRACER.span("predict_volume", n_voxels=int(x.shape[0]),
+                               chunk=chunk, pooled=server is not None):
+        if server is not None:
+            rid = server.submit_scan(plan, x, chunk=chunk,
+                                     priority=priority, backend=backend,
+                                     fused=fused)
+            server.run()
+            mean, std = server.result(rid).scan_moments()
+        else:
+            mean, std = predict_packed(plan, x, chunk=chunk,
+                                       backend=backend, fused=fused)
     return (mean.reshape(lead + (mean.shape[-1],)),
             std.reshape(lead + (std.shape[-1],)))
 

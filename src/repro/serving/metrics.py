@@ -14,17 +14,28 @@ valid voxel count). Occupancy keeps one total gauge (so single-modality
 numbers are unchanged) plus a voxel-slot sample per step.
 
 Timestamps come from an injectable clock so tests and trace replays can run
-on virtual time.
+on virtual time; the default is ``obs.trace.default_clock`` (monotonic),
+the one sanctioned serving clock — nothing in this package calls ``time.*``
+directly (ci.sh greps for it).
+
+The collector is double-entry: every lifecycle mark ALSO drives the
+``obs.registry`` instruments (``serving_requests_total{modality}``, ...),
+so the Prometheus exposition and :meth:`summary` can never disagree on
+totals — one method updates both. Note the registry is process-global by
+default, so its totals accumulate across collectors; pass a fresh
+``Registry`` to isolate (tests do).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-import time
 from typing import Callable
 
 import numpy as np
+
+from repro.obs import registry as obs_registry
+from repro.obs import trace as obs_trace
 
 __all__ = ["RequestTimeline", "ServingSummary", "MetricsCollector"]
 
@@ -123,12 +134,41 @@ def _pct(values: list[float], q: float) -> float:
 
 
 class MetricsCollector:
-    """Accumulates request timelines + per-step gauge samples."""
+    """Accumulates request timelines + per-step gauge samples, mirroring
+    every mark onto ``obs.registry`` instruments (same numbers, two views:
+    ``summary()`` for humans, the exposition for scrapers)."""
 
     def __init__(self, max_slots: int,
-                 clock: Callable[[], float] = time.perf_counter) -> None:
+                 clock: Callable[[], float] | None = None,
+                 registry: obs_registry.Registry | None = None) -> None:
         self.max_slots = max_slots
-        self.clock = clock
+        self.clock = obs_trace.default_clock if clock is None else clock
+        self.registry = obs_registry.REGISTRY if registry is None else registry
+        reg = self.registry
+        self._c_requests = reg.counter(
+            "serving_requests_total", "work items enqueued",
+            labels=("modality",))
+        self._c_emissions = reg.counter(
+            "serving_emissions_total",
+            "units emitted (LM tokens / valid voxels)", labels=("modality",))
+        self._c_finished = reg.counter(
+            "serving_finished_total", "work items finished",
+            labels=("modality",))
+        self._c_escalated = reg.counter(
+            "serving_escalated_total", "finished work items that escalated",
+            labels=("modality",))
+        self._c_steps = reg.counter(
+            "serving_decode_steps_total", "pool decode steps executed")
+        self._g_queue = reg.gauge(
+            "serving_queue_depth", "queued work items at last step")
+        self._g_occupied = reg.gauge(
+            "serving_occupied_slots", "occupied slots at last step")
+        self._g_voxel = reg.gauge(
+            "serving_voxel_occupied_slots",
+            "slots held by voxel chunks at last step")
+        self._h_latency = reg.histogram(
+            "serving_request_latency_seconds",
+            "enqueue->finish latency", labels=("modality",))
         self.timelines: dict[int, RequestTimeline] = {}
         self.occupancy_samples: list[int] = []
         self.voxel_occupancy_samples: list[int] = []
@@ -144,6 +184,7 @@ class MetricsCollector:
             self._start = t
         self.timelines[req_id] = RequestTimeline(req_id, enqueue_t=t,
                                                  modality=modality)
+        self._c_requests.inc(modality=modality)
 
     def on_admit(self, req_id: int) -> None:
         self.timelines[req_id].admit_t = self.clock()
@@ -164,11 +205,17 @@ class MetricsCollector:
         tl.tokens_out += units
         if tl.first_token_t is None:
             tl.first_token_t = t
+        self._c_emissions.inc(units, modality=tl.modality)
 
     def on_finish(self, req_id: int, escalated: bool = False) -> None:
         tl = self.timelines[req_id]
         tl.finish_t = self._end = self.clock()
         tl.escalated = escalated
+        self._c_finished.inc(modality=tl.modality)
+        if escalated:
+            self._c_escalated.inc(modality=tl.modality)
+        if tl.latency is not None:
+            self._h_latency.observe(tl.latency, modality=tl.modality)
 
     # ---- per-step gauges ---------------------------------------------------
     def on_step(self, occupied_slots: int, queue_depth: int,
@@ -177,6 +224,10 @@ class MetricsCollector:
         self.occupancy_samples.append(occupied_slots)
         self.voxel_occupancy_samples.append(voxel_occupied)
         self.queue_depth_samples.append(queue_depth)
+        self._c_steps.inc()
+        self._g_occupied.set(occupied_slots)
+        self._g_voxel.set(voxel_occupied)
+        self._g_queue.set(queue_depth)
 
     # ---- rollup ------------------------------------------------------------
     def summary(self) -> ServingSummary:

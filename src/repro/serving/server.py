@@ -49,7 +49,6 @@ import dataclasses
 import functools
 import heapq
 import itertools
-import time
 from typing import Any, Callable
 
 import jax
@@ -61,9 +60,32 @@ from repro.core import plan as plan_lib
 from repro.core import scheduler as scheduler_lib, uncertainty as unc_lib
 from repro.models import transformer
 from repro.models.model import Model
+from repro.obs import profile as obs_profile
+from repro.obs import registry as obs_registry
+from repro.obs import trace as obs_trace
 from repro.serving.metrics import MetricsCollector, ServingSummary
 
 Params = dict[str, Any]
+
+# -- serving telemetry (process registry; see repro/obs/registry.py) --------
+_REJECTS = obs_registry.REGISTRY.counter(
+    "serving_queue_rejections_total",
+    "admissions refused by max_queue backpressure", labels=("modality",))
+_PREEMPTS = obs_registry.REGISTRY.counter(
+    "serving_preemptions_total",
+    "running work items bounced back to the queue", labels=("policy",))
+_FALLBACKS = obs_registry.REGISTRY.counter(
+    "fused_fallback_total",
+    "fused-executor demotions to the per-op path, by stage (build = no "
+    "fused lowering for the config; trace = a kernel guard fired on a "
+    "concrete pool shape) and key", labels=("stage", "key"))
+
+
+def _note_fallback(stage: str, key: str) -> None:
+    """Record one fused->per-op demotion (counter + trace event); shared
+    with engine.plan_chunk_runner."""
+    _FALLBACKS.inc(stage=stage, key=key)
+    obs_trace.TRACER.event("fused_fallback", stage=stage, key=key)
 
 __all__ = ["mesh_scope", "QueueFullError", "Request", "VoxelScanRequest",
            "WorkItem", "RequestState", "ServerConfig",
@@ -213,12 +235,22 @@ def _step_fns(cfg, expand_masks: bool, fused: bool | None,
             prefill_spec = None
 
     if prefill_spec is None:
-        prefill = exact_prefill
+        def prefill(params, tokens, max_seq):
+            tr = obs_trace.TRACER
+            if tr.enabled:
+                tr.event("prefill", path="exact", bucket=None,
+                         length=int(np.shape(tokens)[1]))
+            return exact_prefill(params, tokens, max_seq=max_seq)
     else:
         def prefill(params, tokens, max_seq):
             toks = jnp.asarray(tokens)
             length = toks.shape[1]
             bucket = plan_lib.prefill_bucket(length, max_seq, buckets)
+            tr = obs_trace.TRACER
+            if tr.enabled:
+                tr.event("prefill",
+                         path="exact" if bucket is None else "bucketed",
+                         bucket=bucket, length=int(length))
             if bucket is None:                 # custom set doesn't cover it
                 return exact_prefill(params, toks, max_seq=max_seq)
             if bucket > length:
@@ -257,6 +289,7 @@ def _step_fns(cfg, expand_masks: bool, fused: bool | None,
             except plan_lib.FusedPlanUnsupported:
                 if fused:
                     raise
+                _note_fallback("build", "decode")
 
     fused_state = None
     if fused_step is None:
@@ -285,6 +318,7 @@ def _step_fns(cfg, expand_masks: bool, fused: bool | None,
                     if fused:
                         raise
                     fused_state["blocked"].add(key)
+                    _note_fallback("trace", str(key))
             return perop_decode(params, caches, tokens, pos)
 
     return StepFns(
@@ -433,6 +467,10 @@ class ServerConfig:
                                       # admission prefill length buckets:
                                       # None = power-of-two auto set,
                                       # () = exact per-length prefill
+    trace: bool = False               # enable span tracing on the process
+                                      # tracer (obs.trace.TRACER) — one
+                                      # record per lifecycle event; off by
+                                      # default (zero hot-path appends)
 
     def __post_init__(self) -> None:
         if self.escalation_policy not in ("flag", "terminate",
@@ -482,9 +520,15 @@ class BayesianLMServer:
 
     def __init__(self, model: Model, params: Params,
                  cfg: ServerConfig = ServerConfig(), *, mesh=None,
-                 clock: Callable[[], float] = time.perf_counter) -> None:
+                 clock: Callable[[], float] | None = None,
+                 tracer: obs_trace.Tracer | None = None) -> None:
         if not model.cfg.bayesian:
             raise ValueError("BayesianLMServer requires mask_samples > 0")
+        # The jit-cached step closures are process-global, so the default
+        # tracer is the process TRACER; cfg.trace=True switches it on.
+        self._tracer = obs_trace.TRACER if tracer is None else tracer
+        if cfg.trace:
+            self._tracer.enable()
         self.model, self.params, self.cfg, self.mesh = model, params, cfg, \
             mesh
         self.schedule = scheduler_lib.SlotSchedule(model.cfg.mask_samples,
@@ -521,6 +565,8 @@ class BayesianLMServer:
             raise ValueError(f"prompt length {len(toks)} outside "
                              f"[1, {self.cfg.max_prompt_len}]")
         if len(self._queue) >= self.cfg.max_queue:
+            _REJECTS.inc(modality="lm")
+            self._tracer.event("reject", kind="lm")
             raise QueueFullError(
                 f"admission queue full ({self.cfg.max_queue})")
         mnt = self.cfg.max_new_tokens if max_new_tokens is None \
@@ -534,6 +580,9 @@ class BayesianLMServer:
         self.states[rid] = st
         heapq.heappush(self._queue, (priority, next(self._seq), rid))
         self.metrics.on_enqueue(rid)
+        self._tracer.event("enqueue", req_id=rid, kind="lm",
+                           prompt_len=len(toks), priority=priority,
+                           queue_depth=len(self._queue))
         return rid
 
     def submit_scan(self, plan, x, *, chunk: int = 4096, priority: int = 0,
@@ -558,6 +607,8 @@ class BayesianLMServer:
         if x.ndim != 2:
             raise ValueError(f"scan must be [n_voxels, D], got {x.shape}")
         if len(self._queue) >= self.cfg.max_queue:
+            _REJECTS.inc(modality="voxel")
+            self._tracer.event("reject", kind="voxel")
             raise QueueFullError(
                 f"admission queue full ({self.cfg.max_queue})")
         bounds = scheduler_lib.chunk_bounds(x.shape[0], chunk)
@@ -570,6 +621,9 @@ class BayesianLMServer:
         self.states[rid] = st
         heapq.heappush(self._queue, (priority, next(self._seq), rid))
         self.metrics.on_enqueue(rid, modality="voxel")
+        self._tracer.event("enqueue", req_id=rid, kind="voxel",
+                           n_voxels=int(x.shape[0]), priority=priority,
+                           queue_depth=len(self._queue))
         return rid
 
     @property
@@ -602,27 +656,29 @@ class BayesianLMServer:
         untouched and keep decoding. Voxel scans touch no pool cache (their
         state is the chunk cursor); the slot is pure scheduling capacity."""
         st = self.states[req_id]
-        if st.kind == "voxel":
+        with self._tracer.span("admit", req_id=req_id, slot=slot,
+                               kind=st.kind, resumed=st.preempts > 0):
+            if st.kind == "voxel":
+                st.status, st.slot = "running", slot
+                self._slots[slot] = req_id
+                if st.preempts == 0:
+                    self.metrics.on_admit(req_id)
+                return
+            ctx = list(st.request.tokens) + st.generated  # re-entry after
+            xt = jnp.tile(jnp.asarray(ctx, jnp.int32)[None],  # preempt
+                          (self.schedule.n_masks, 1))
+            with mesh_scope(self.mesh):
+                mean, rel, fresh = self.steps.prefill(
+                    self.params, xt, max_seq=self.cfg.max_seq)
+                self._caches = self._scatter(
+                    self._caches, fresh, self.schedule.rows_for_slot(slot))
+                st.pending = int(jnp.argmax(mean[0]))
+                st.pending_unc = float(rel[0])
             st.status, st.slot = "running", slot
             self._slots[slot] = req_id
             if st.preempts == 0:
                 self.metrics.on_admit(req_id)
-            return
-        ctx = list(st.request.tokens) + st.generated   # re-entry after preempt
-        xt = jnp.tile(jnp.asarray(ctx, jnp.int32)[None],
-                      (self.schedule.n_masks, 1))
-        with mesh_scope(self.mesh):
-            mean, rel, fresh = self.steps.prefill(self.params, xt,
-                                                  max_seq=self.cfg.max_seq)
-            self._caches = self._scatter(self._caches, fresh,
-                                         self.schedule.rows_for_slot(slot))
-            st.pending = int(jnp.argmax(mean[0]))
-            st.pending_unc = float(rel[0])
-        st.status, st.slot = "running", slot
-        self._slots[slot] = req_id
-        if st.preempts == 0:
-            self.metrics.on_admit(req_id)
-            self.metrics.on_first_token(req_id)   # computed by the prefill
+                self.metrics.on_first_token(req_id)  # computed by prefill
 
     def _release_slot(self, slot: int) -> None:
         """Free a slot group: clear host state and reset its cache rows
@@ -637,6 +693,8 @@ class BayesianLMServer:
         self._release_slot(st.slot)
         st.slot, st.pending = None, None
         self.metrics.on_finish(st.request.req_id, escalated=st.escalated)
+        self._tracer.event("finish", req_id=st.request.req_id,
+                           status=st.status, kind=st.kind)
 
     def _preempt(self, st: RequestState) -> None:
         """Deprioritize policy: bounce an escalated request back to the queue
@@ -648,6 +706,9 @@ class BayesianLMServer:
         st.effective_priority += self.cfg.deprioritize_penalty
         heapq.heappush(self._queue, (st.effective_priority, next(self._seq),
                                      st.request.req_id))
+        _PREEMPTS.inc(policy=self.cfg.escalation_policy)
+        self._tracer.event("preempt", req_id=st.request.req_id,
+                           priority=st.effective_priority)
 
     # ---- the engine iteration ----------------------------------------------
     def step(self) -> bool:
@@ -670,29 +731,36 @@ class BayesianLMServer:
         self.metrics.on_step(len(occupied), len(self._queue),
                              voxel_occupied=len(voxel))
 
-        if lm:
-            # Inactive slots decode at pos -1: their (garbage) K/V write
-            # lands on a kpos=-1 slot, so unoccupied rows stay observably
-            # empty — voxel-occupied slots never touch the pool cache and
-            # ride along exactly like empty ones.
-            tok = np.zeros(self.cfg.max_slots, np.int32)
-            pos = np.full(self.cfg.max_slots, -1, np.int32)
-            for slot, rid in lm:
-                st = self.states[rid]
-                tok[slot] = st.pending
-                pos[slot] = st.next_pos
-            rows_tok = self.schedule.row_values(jnp.asarray(tok))[:, None]
-            rows_pos = self.schedule.row_values(jnp.asarray(pos))
-            with mesh_scope(self.mesh):
-                mean, rel, self._caches = self.steps.decode(
-                    self.params, self._caches, rows_tok, rows_pos)
-                nxt = np.asarray(jnp.argmax(mean, -1))
-            rel = np.asarray(rel)
-            for slot, rid in lm:
-                self._absorb(self.states[rid], int(nxt[slot]),
-                             float(rel[slot]))
-        for _, rid in voxel:
-            self._advance_scan(self.states[rid])
+        with self._tracer.span("step", lm=len(lm), voxel=len(voxel),
+                               queue_depth=len(self._queue)), \
+                obs_profile.annotate("serving.step"):
+            if lm:
+                # Inactive slots decode at pos -1: their (garbage) K/V write
+                # lands on a kpos=-1 slot, so unoccupied rows stay observably
+                # empty — voxel-occupied slots never touch the pool cache and
+                # ride along exactly like empty ones.
+                tok = np.zeros(self.cfg.max_slots, np.int32)
+                pos = np.full(self.cfg.max_slots, -1, np.int32)
+                for slot, rid in lm:
+                    st = self.states[rid]
+                    tok[slot] = st.pending
+                    pos[slot] = st.next_pos
+                rows_tok = self.schedule.row_values(jnp.asarray(tok))[:, None]
+                rows_pos = self.schedule.row_values(jnp.asarray(pos))
+                if self._tracer.enabled:
+                    self._tracer.event("decode", rows=self.schedule.rows,
+                                       slots=len(lm),
+                                       fused=self.steps.fused_live())
+                with mesh_scope(self.mesh):
+                    mean, rel, self._caches = self.steps.decode(
+                        self.params, self._caches, rows_tok, rows_pos)
+                    nxt = np.asarray(jnp.argmax(mean, -1))
+                rel = np.asarray(rel)
+                for slot, rid in lm:
+                    self._absorb(self.states[rid], int(nxt[slot]),
+                                 float(rel[slot]))
+            for _, rid in voxel:
+                self._advance_scan(self.states[rid])
         return True
 
     def _advance_scan(self, st: RequestState) -> None:
@@ -717,6 +785,10 @@ class BayesianLMServer:
         rel = np.asarray(std[:valid]) / np.maximum(
             np.abs(np.asarray(mean[:valid])), unc_lib.REL_UNC_EPS)
         st.chunk_results.append((mean, std))
+        if self._tracer.enabled:
+            self._tracer.event("chunk", req_id=req.req_id,
+                               index=len(st.chunk_results) - 1,
+                               voxels=valid, rel=float(rel.max()))
         self._absorb_chunk(st, float(rel.max()), n_voxels=valid)
 
     def _absorb(self, st: RequestState, next_tok: int, rel: float) -> None:
@@ -734,10 +806,16 @@ class BayesianLMServer:
         st.pending = next_tok
         st.pending_unc = rel
         self.metrics.on_token(st.request.req_id)
+        if self._tracer.enabled:
+            self._tracer.event("token", req_id=st.request.req_id,
+                               token=st.generated[-1],
+                               rel=st.uncertainty[-1], flagged=flagged)
         newly = not st.escalated and \
             st.flag_streak >= cfg.escalation_patience
         if newly:
             st.escalated = True
+            self._tracer.event("escalate", req_id=st.request.req_id,
+                               policy=cfg.escalation_policy)
         if st.escalated and cfg.escalation_policy == "terminate":
             self._finish(st, terminated=True)
         elif len(st.generated) >= st.request.max_new_tokens:
@@ -763,6 +841,8 @@ class BayesianLMServer:
             st.flag_streak >= cfg.escalation_patience
         if newly:
             st.escalated = True
+            self._tracer.event("escalate", req_id=st.request.req_id,
+                               policy=cfg.escalation_policy)
         if st.escalated and cfg.escalation_policy == "terminate":
             self._finish(st, terminated=True)
         elif len(st.chunk_results) >= len(st.request.bounds):
