@@ -89,6 +89,30 @@ def run(n_voxels: int = 20_000, n_masks: int = 8, scale: float = 2.0,
     if max_delta > 1e-3:
         raise SystemExit(f"fused vs per-op moments diverge: {max_delta:.3e}")
 
+    # quantized serving: the SAME plan re-lowered at int8 weight precision
+    # (per-output-channel scales + bf16 biases, quantized once at lowering).
+    # Gates (the CI quantized leg relies on the nonzero exits): moments
+    # within int8 tolerance of the fp32 plan, and modeled fused weight
+    # bytes <= 0.35x fp32 at the f32 master-param width.
+    from repro.core import plan as plan_lib
+    plan_q = plan.with_precision(plan_lib.Precision(weights="int8"))
+
+    def packed_quant(xb):
+        return engine.predict_packed(plan_q, xb, backend=backend, fused=True)
+
+    t_quant = _timeit(jax.jit(packed_quant), x)
+    m_q, s_q = packed_quant(x)
+    quant_delta = float(max(jnp.abs(m_q - m_f).max(),
+                            jnp.abs(s_q - s_f).max()))
+    if quant_delta > 1e-2:
+        raise SystemExit(f"int8 vs fp32 moments diverge: {quant_delta:.3e}")
+    tm_fused_f32 = plan.traffic(n_voxels, 4, fused=True, moments=True)
+    tm_fused_q = plan_q.traffic(n_voxels, 4, fused=True, moments=True)
+    quant_ratio = tm_fused_q.weight_bytes / tm_fused_f32.weight_bytes
+    if quant_ratio > 0.35:
+        raise SystemExit(f"int8 fused weight bytes {quant_ratio:.4f}x fp32 "
+                         f"(acceptance gate: <= 0.35x)")
+
     tm_batch = plan.traffic(n_voxels)
     tm_samp = plan.traffic(n_voxels,
                            schedule=scheduler.Schedule("sampling", chunk=64))
@@ -139,6 +163,14 @@ def run(n_voxels: int = 20_000, n_masks: int = 8, scale: float = 2.0,
             1, tm_fused.total_bytes),
         "modeled_v5e_speedup": lat_base / lat_opt,
         "modeled_v5e_fused_speedup": lat_base / lat_fused,
+        "quantized": {
+            "wall_fused_int8_ms": t_quant * 1e3,
+            "voxel_rate_fused_int8": n_voxels / t_quant,
+            "max_delta_vs_fp32": quant_delta,
+            "weight_bytes_fused_fp32": tm_fused_f32.weight_bytes,
+            "weight_bytes_fused_int8": tm_fused_q.weight_bytes,
+            "weight_bytes_ratio": quant_ratio,
+        },
     }
     if not quiet:
         print(f"# IVIM volume serving (voxels={n_voxels}, N={n_masks}, "
@@ -162,6 +194,12 @@ def run(n_voxels: int = 20_000, n_masks: int = 8, scale: float = 2.0,
         print(f"model fidelity: measured/modeled "
               f"{model_fidelity['ratio_measured_to_modeled']:.1f}x per "
               f"voxel (modeled for {model_fidelity['tpu']})")
+        q = out["quantized"]
+        print(f"quantized: int8 fused {q['wall_fused_int8_ms']:.2f} ms, "
+              f"weight bytes {q['weight_bytes_fused_int8'] / 1e3:.1f} kB vs "
+              f"fp32 {q['weight_bytes_fused_fp32'] / 1e3:.1f} kB "
+              f"({q['weight_bytes_ratio']:.3f}x, gate <= 0.35), "
+              f"max|err| vs fp32 {q['max_delta_vs_fp32']:.1e}")
     return out
 
 
@@ -206,6 +244,7 @@ def write_bench_json(out: dict, path: pathlib.Path = BENCH_JSON) -> dict:
             "reduction": out["fused_bytes_reduction"],
         },
         "equivalence_max_delta": out["fused_max_delta"],
+        "quantized": out["quantized"],
     }
     path.write_text(json.dumps(payload, indent=2) + "\n")
     return payload

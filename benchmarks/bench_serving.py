@@ -201,6 +201,9 @@ def run(smoke: bool = False, quiet: bool = False, seed: int = 0,
     _run_server(model, params, scfg, arrivals[:1], prompts[:1], max_new)
     _run_server(model, params, scfg_perop, arrivals[:1], prompts[:1],
                 max_new)
+    for kvd in ("bfloat16", "int8"):
+        _run_server(model, params, dataclasses.replace(scfg, kv_dtype=kvd),
+                    arrivals[:1], prompts[:1], max_new)
 
     base_outs, base_wall = _run_baseline(model, params, prompts, max_new)
     srv_outs, srv_wall, summary = _run_server(model, params, scfg, arrivals,
@@ -210,6 +213,33 @@ def run(smoke: bool = False, quiet: bool = False, seed: int = 0,
     # checked AFTER the runs: the kernel guards fire at first call, so a
     # build-time check would report a silently-fallen-back leg as fused
     fused_active = server_lib.step_fns(cfg, fused=scfg.fused).fused_live()
+
+    # -- quantized-KV legs: same trace, compressed slot-pool cache ----------
+    # bf16 rides the fused decode step; int8 (per-position scale leaves)
+    # serves through the per-op fallback. Gate for both: tokens identical
+    # to the f32-cache fused leg; and the bf16 spec must model strictly
+    # fewer decode HBM bytes at the f32 master width.
+    scfg_kv16 = dataclasses.replace(scfg, kv_dtype="bfloat16")
+    kv16_outs, kv16_wall, _ = _run_server(model, params, scfg_kv16, arrivals,
+                                          prompts, max_new)
+    scfg_kv8 = dataclasses.replace(scfg, kv_dtype="int8")
+    kv8_outs, kv8_wall, _ = _run_server(model, params, scfg_kv8, arrivals,
+                                        prompts, max_new)
+    total_tokens_kv = sum(len(t) for t, _ in srv_outs)
+    quantized = {
+        "kv_bf16_tok_s": total_tokens_kv / kv16_wall,
+        "kv_int8_tok_s": total_tokens_kv / kv8_wall,
+        "kv_bf16_tokens_match": all(
+            np.array_equal(st, qt) for (st, _), (qt, _)
+            in zip(srv_outs, kv16_outs)),
+        "kv_int8_tokens_match": all(
+            np.array_equal(st, qt) for (st, _), (qt, _)
+            in zip(srv_outs, kv8_outs)),
+        "kv_max_unc_delta": max(
+            float(np.max(np.abs(su - qu)))
+            for q_outs in (kv16_outs, kv8_outs)
+            for (_, su), (_, qu) in zip(srv_outs, q_outs)),
+    }
 
     mixed_res = None
     if mixed:
@@ -291,6 +321,15 @@ def run(smoke: bool = False, quiet: bool = False, seed: int = 0,
                                           fused=False).total_bytes \
         / max_slots
 
+    # modeled decode bytes of the bf16-KV spec vs the f32 cache, both at
+    # the f32 master width (the cache dtype is the only difference)
+    spec_kv16 = plan_lib.decode_fused_spec(
+        dataclasses.replace(cfg, kv_dtype="bfloat16"))
+    quantized["modeled_bytes_per_token_kv_f32"] = plan_lib.decode_traffic(
+        spec, rows, scfg.max_seq, 4, fused=True).total_bytes / max_slots
+    quantized["modeled_bytes_per_token_kv_bf16"] = plan_lib.decode_traffic(
+        spec_kv16, rows, scfg.max_seq, 4, fused=True).total_bytes / max_slots
+
     # modeled-vs-measured cross-check: join the fused server leg's wall
     # time against the analytic decode traffic (per-stage split included)
     model_fidelity = crosscheck.model_fidelity(
@@ -327,6 +366,14 @@ def run(smoke: bool = False, quiet: bool = False, seed: int = 0,
         print(f"traced replay: {trace_records} records, tokens bitwise == "
               f"untraced: {trace_tokens_match}, zero added retraces: "
               f"{trace_zero_retrace}")
+        print(f"quantized KV: bf16 {quantized['kv_bf16_tok_s']:.1f} tok/s "
+              f"(fused), int8 {quantized['kv_int8_tok_s']:.1f} tok/s "
+              f"(per-op); tokens identical: bf16 "
+              f"{quantized['kv_bf16_tokens_match']}, int8 "
+              f"{quantized['kv_int8_tokens_match']}; modeled bytes/token "
+              f"{quantized['modeled_bytes_per_token_kv_f32']:,.0f} (f32 "
+              f"cache) -> {quantized['modeled_bytes_per_token_kv_bf16']:,.0f}"
+              f" (bf16 cache)")
         print(f"model fidelity: measured/modeled "
               f"{model_fidelity['ratio_measured_to_modeled']:.1f}x "
               f"per {model_fidelity['unit']} "
@@ -358,6 +405,7 @@ def run(smoke: bool = False, quiet: bool = False, seed: int = 0,
         "summary": summary,
         "perop_summary": po_summary,
         "mixed": mixed_res,
+        "quantized": quantized,
         "model_fidelity": model_fidelity,
         "trace_records": trace_records,
         "trace_tokens_match": trace_tokens_match,
@@ -409,6 +457,7 @@ def write_bench_json(out: dict, path: pathlib.Path = BENCH_JSON) -> dict:
         },
         "fused_decode_active": out["fused_active"],
         "tokens_identical_fused_vs_per_op": out["fused_tokens_match"],
+        "quantized": out["quantized"],
         "model_fidelity": out["model_fidelity"],
         "trace": {
             "records": out["trace_records"],
@@ -441,6 +490,10 @@ def main() -> int:
                     help="gate on the fused decode leg: it must run fused "
                          "(no silent per-op fallback) and match the per-op "
                          "tokens bitwise")
+    ap.add_argument("--quantized", action="store_true",
+                    help="gate on the quantized-KV legs: bf16/int8 cache "
+                         "tokens must match the f32-cache leg and the bf16 "
+                         "spec must model strictly fewer decode HBM bytes")
     ap.add_argument("--mixed", action="store_true",
                     help="add the mixed-modality leg: IVIM scans as "
                          "voxel-chunk work items in the same pool; gates on "
@@ -484,6 +537,21 @@ def main() -> int:
             res["modeled_bytes_per_token_perop"]:
         print("ERROR: fused decode step models no HBM-byte reduction")
         return 1
+    if args.quantized:
+        q = res["quantized"]
+        if not (q["kv_bf16_tokens_match"] and q["kv_int8_tokens_match"]):
+            print("ERROR: quantized-KV server tokens diverged from the "
+                  "f32-cache leg")
+            return 1
+        if q["kv_max_unc_delta"] > 1e-3:
+            print(f"ERROR: quantized-KV uncertainty diverged beyond "
+                  f"tolerance ({q['kv_max_unc_delta']:.2e} > 1e-3)")
+            return 1
+        if q["modeled_bytes_per_token_kv_bf16"] >= \
+                q["modeled_bytes_per_token_kv_f32"]:
+            print("ERROR: bf16 KV cache models no decode HBM-byte "
+                  "reduction over the f32 cache")
+            return 1
     if args.mixed:
         if not res["mixed"]["moments_bitwise"]:
             print("ERROR: pooled scan moments diverged from the direct "

@@ -69,6 +69,11 @@ def main() -> None:
                 "whole-plan megakernel vs per-op executor, wall"))
     csv.append(("ivim_fused_bytes_reduction", ivp["fused_bytes_reduction"],
                 "plan traffic: per-op / fused modeled HBM bytes"))
+    csv.append(("ivim_int8_weight_bytes_ratio",
+                ivp["quantized"]["weight_bytes_ratio"],
+                "int8 / fp32 modeled fused weight bytes (gate <= 0.35)"))
+    csv.append(("ivim_int8_max_delta", ivp["quantized"]["max_delta_vs_fp32"],
+                "int8 vs fp32 fused moments, max abs"))
     # canonical perf-trajectory artifact (fused vs per-op vs unpacked, with
     # backend + shape provenance) — future PRs compare against this file.
     # Smoke runs must not clobber the committed full-size numbers.
@@ -106,6 +111,10 @@ def main() -> None:
                 "modeled per-token decode HBM bytes, per-op / fused"))
     csv.append(("serving_uncertainty_max_delta", srv["max_unc_delta"],
                 "per-token rel-unc |server - one-shot|"))
+    csv.append(("serving_kv_bf16_bytes_reduction",
+                srv["quantized"]["modeled_bytes_per_token_kv_f32"]
+                / srv["quantized"]["modeled_bytes_per_token_kv_bf16"],
+                "modeled decode HBM bytes/token, f32 cache / bf16 cache"))
     if srv["mixed"] is not None:
         csv.append(("serving_mixed_pool_voxels_per_s",
                     srv["mixed"]["voxels_per_s"],

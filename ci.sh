@@ -63,6 +63,17 @@ REPRO_KERNEL_BACKEND=pallas-interpret \
 REPRO_KERNEL_BACKEND=pallas-interpret \
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_serving --smoke --fused
 
+# Quantized-serving smoke: int8 packed weights through the fused Pallas
+# kernel (bench_ivim_packed exits nonzero if int8 moments drift past
+# tolerance or the modeled int8 fused weight bytes exceed 0.35x fp32) and
+# the bf16/int8 KV-cache server legs (bench_serving --quantized exits
+# nonzero if their tokens diverge from the f32-cache leg or the bf16 spec
+# models no decode HBM-byte reduction). Dispatches are labeled
+# kernel_dispatch_total{tier,precision} in the registry snapshot.
+REPRO_KERNEL_BACKEND=pallas-interpret \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_serving --smoke --quantized
+# (the int8 weight gates ride every bench_ivim_packed run above)
+
 # Mixed-modality + observability smoke: IVIM scans as voxel-chunk work
 # items interleaved into the same serving pool as the LM trace, with the
 # traced replay exporting its JSONL span log and the Prometheus exposition.

@@ -129,6 +129,11 @@ class ModelConfig:
     # body once regardless of trip count)
     analysis_unroll: bool = False
     dtype: Any = jnp.bfloat16        # activation/param compute dtype
+    # KV cache storage dtype tag: "" = cache in `dtype`; "bfloat16" keeps
+    # the cache in bf16 (fused decode supported — attention upcasts cache
+    # reads to f32); "int8" adds per-(row, head, slot) scale leaves and
+    # serves through the per-op decode path only.
+    kv_dtype: str = ""
     remat: str = "full"              # none | full | dots
     attn_chunk: int = 1024           # q-chunk for the XLA chunked-attn path
     use_pallas: bool = False         # real-TPU flag: route hot ops to kernels
@@ -139,6 +144,8 @@ class ModelConfig:
         if self.family not in ("dense", "moe", "hybrid", "audio", "vlm",
                                "ssm"):
             raise ValueError(f"unknown family {self.family}")
+        if self.kv_dtype not in ("", "bfloat16", "int8"):
+            raise ValueError(f"unknown kv_dtype {self.kv_dtype!r}")
 
     @property
     def resolved_head_dim(self) -> int:

@@ -72,6 +72,7 @@ Params = dict[str, Any]
 
 __all__ = [
     "SharedDense", "PackedPair", "Activation", "OutputHead", "PackedPlan",
+    "Precision", "DTYPE_BYTES",
     "fold_bn_dense", "fold_bn_ivim", "compile_ivim", "compile_mlp",
     "compile_masked_ffn", "pack_ffn_leaves", "ffn_leaves_apply", "execute",
     "lower_fused", "execute_fused", "fused_executor",
@@ -94,6 +95,35 @@ ACTIVATIONS: dict[str, Callable[[jax.Array], jax.Array]] = {
 def activation_fn(name: str) -> Callable[[jax.Array], jax.Array]:
     """Resolve an activation name ('gelu_mlp' is the plain-MLP gelu)."""
     return ACTIVATIONS["gelu" if name == "gelu_mlp" else name]
+
+
+#: Storage bytes per element by dtype tag — the per-tensor pricing table the
+#: traffic models consult ("" = defer to the call's ``bytes_per_el``).
+DTYPE_BYTES: dict[str, int] = {
+    "float32": 4, "bfloat16": 2, "float16": 2, "int8": 1}
+
+
+def _dtype_bytes(tag: str, default: int) -> int:
+    return DTYPE_BYTES.get(tag, default) if tag else default
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    """Serving precision policy of a :class:`PackedPlan`.
+
+    ``weights``: storage dtype of the packed dense weights as they cross
+    HBM→VMEM — "fp32" (native, the bitwise-gated default) or "int8"
+    (per-output-channel symmetric quantization applied ONCE at
+    ``lower_fused`` time, scales carried as bf16 param slots, dequant
+    in-kernel next to the matmul; biases store as bf16 too). The KV-cache
+    dtype is a *model/server* knob (``ModelConfig.kv_dtype`` /
+    ``ServerConfig.kv_dtype``), not a plan property, so it lives there.
+    """
+    weights: str = "fp32"
+
+    def __post_init__(self) -> None:
+        if self.weights not in ("fp32", "int8"):
+            raise ValueError(f"unknown weight precision {self.weights!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -186,11 +216,18 @@ class PackedPlan:
     groups: int = 1
     schedule: sched_lib.Schedule = sched_lib.Schedule("batch")
     out_ranges: tuple[tuple[float, float], ...] | None = None
+    precision: Precision = Precision()
 
     @property
     def sample_axis(self) -> int:
         """Rows of the kernel's sample axis (groups × masks)."""
         return self.groups * self.n_masks
+
+    def with_precision(self, precision: Precision) -> "PackedPlan":
+        """Same plan (same fp32 master params), different serving precision.
+        Quantization happens at ``lower_fused`` time, so distinct precisions
+        lower to distinct (cached) fused specs."""
+        return dataclasses.replace(self, precision=precision)
 
     @property
     def pairs(self) -> tuple[PackedPair, ...]:
@@ -225,32 +262,53 @@ class PackedPlan:
         loop).
         """
         n = self.sample_axis
+        quant = self.precision.weights == "int8"
+        wb = 1 if quant else bytes_per_el
+        # The int8 bundle ships bf16 per-output-channel dequant scales (one
+        # per output unit) and bf16 biases next to the int8 matrices — price
+        # every tensor family at its own width.
+        sb = 2 if quant else 0                    # scale bytes per d_out unit
+        bb = 2 if quant else bytes_per_el         # bias bytes per element
+
+        def wcost(rows: int, d_in: int, d_out: int) -> int:
+            """HBM bytes of one weight matrix set [rows, d_in, d_out] at the
+            plan's weight precision (+ its scale tensors when quantized)."""
+            return rows * d_in * d_out * wb + rows * d_out * sb
+
         if not fused:
             schedule = schedule or self.schedule
             w = a = f = loads = 0
             for op in self.pairs:
                 tm = sched_lib.traffic_model(schedule, batch, n, op.d_in,
-                                             op.keep, op.d_out, bytes_per_el)
+                                             op.keep, op.d_out, bytes_per_el,
+                                             weight_bytes_per_el=wb)
                 w += tm.weight_bytes
+                # per load set: scale tensors of the two packed matrices
+                # (keep + d_out output units) and the bias repricing delta
+                # (traffic_model prices biases at bytes_per_el)
+                w += tm.weight_loads * (op.keep + op.d_out) \
+                    * (sb + bb - bytes_per_el)
                 a += tm.act_bytes
                 f += tm.flops
                 loads += tm.weight_loads
             return sched_lib.TrafficModel(weight_bytes=w, act_bytes=a,
                                           flops=f, weight_loads=loads)
-        w_el = flops = 0
+        w_bytes = flops = 0
         d_first = d_last = None
         for op in self.ops:
             if isinstance(op, SharedDense):
-                w_el += op.d_in * op.d_out + op.d_out
+                w_bytes += wcost(1, op.d_in, op.d_out) + op.d_out * bb
                 flops += 2 * batch * op.d_in * op.d_out
             elif isinstance(op, PackedPair):
-                w_el += n * (op.d_in * op.keep + op.keep
-                             + op.keep * op.d_out + op.d_out)
+                w_bytes += wcost(n, op.d_in, op.keep) \
+                    + wcost(n, op.keep, op.d_out) \
+                    + n * (op.keep + op.d_out) * bb
                 flops += 2 * n * batch * (op.d_in * op.keep
                                           + op.keep * op.d_out)
             elif isinstance(op, OutputHead):
                 rows = n if op.per_mask else 1
-                w_el += rows * (op.d_in * op.d_out + op.d_out)
+                w_bytes += wcost(rows, op.d_in, op.d_out) \
+                    + rows * op.d_out * bb
                 flops += 2 * rows * batch * op.d_in * op.d_out
             else:
                 continue
@@ -261,7 +319,7 @@ class PackedPlan:
         out_el = (2 * batch * self.groups * d_last if moments
                   else n * batch * d_last)
         act_bytes = (in_el + out_el) * bytes_per_el
-        return sched_lib.TrafficModel(weight_bytes=w_el * bytes_per_el,
+        return sched_lib.TrafficModel(weight_bytes=w_bytes,
                                       act_bytes=act_bytes, flops=flops,
                                       weight_loads=n)
 
@@ -537,36 +595,87 @@ _BACKEND_INTERPRET: dict[str | None, bool | None] = {
     None: None, "pallas-tpu": False, "pallas-interpret": True}
 
 
+def _quantize_weight(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-output-channel symmetric int8 of one weight matrix set [.., D, K]
+    -> (q int8 [.., D, K], scales bf16 [.., 1, K]).
+
+    The one quantizer every precision path shares — ``distributed.
+    compression.quantize_int8``'s per-row symmetric scheme applied along
+    each output unit's fan-in (its rows are the *columns* of w, the
+    standard per-channel weight layout), so the per-op and fused executors
+    see identical quantized values. Scales store as bf16: one scale per
+    output unit, lane-aligned next to the weight tile, and the ~2^-9
+    relative rounding is far inside the int8 step itself."""
+    from repro.distributed import compression
+    q, s = compression.quantize_int8(jnp.swapaxes(w, -1, -2))
+    return (jnp.swapaxes(q, -1, -2),
+            jnp.swapaxes(s, -1, -2).astype(jnp.bfloat16))
+
+
+def _dequantized(w: jax.Array) -> jax.Array:
+    """Round-trip a weight through the serving quantizer: the f32 values the
+    int8 kernels compute with (per-op einsum paths use this so every op kind
+    of an int8 plan matches the fused int8 graph)."""
+    q, s = _quantize_weight(w)
+    return q.astype(jnp.float32) * s.astype(jnp.float32)
+
+
+def _low_bias(b: jax.Array) -> jax.Array:
+    """Bias storage dtype of the int8 serving bundle: bf16. Every use site
+    (kernel, oracle, einsum paths) upcasts biases before the add, so the
+    storage cast is the only value change — and it is shared by the per-op
+    and fused executors, which keeps them bitwise-aligned."""
+    return b.astype(jnp.bfloat16)
+
+
 def _run_pair(op: PackedPair, p: Params, h: jax.Array, backend: str | None,
-              kernel_kw: dict) -> jax.Array:
+              kernel_kw: dict, precision: Precision = Precision()
+              ) -> jax.Array:
     """One PackedPair. Shared input [B, D] with relu dispatches through the
     masked_ffn kernel stack; per-sample input or non-relu activations take
-    the sample-major einsum form (same batch-level contraction order)."""
+    the sample-major einsum form (same batch-level contraction order).
+    int8 precision quantizes here (same quantizer as ``lower_fused``) and
+    hands the masked_ffn kernel int8 weights + scale operands."""
+    quant = precision.weights == "int8"
     if h.ndim == 2 and op.activation == "relu":
         b2 = p.get("b2")
         if b2 is None:
             b2 = jnp.zeros((p["w2p"].shape[-1],), h.dtype)
+        w1p, w2p, b1p = p["w1p"], p["w2p"], p["b1p"]
+        scales: tuple[jax.Array, ...] = ()
+        if quant:
+            w1p, s1 = _quantize_weight(w1p)
+            w2p, s2 = _quantize_weight(w2p)
+            scales = (s1, s2)
+            b1p, b2 = _low_bias(b1p), _low_bias(b2)
         if backend == "xla":
             from repro.kernels.masked_ffn import ref as mffn_ref
-            y = mffn_ref.masked_ffn_ref(h, p["w1p"], p["b1p"], p["w2p"], b2)
+            y = mffn_ref.masked_ffn_ref(h, w1p, b1p, w2p, b2, *scales)
         else:
             from repro.kernels.masked_ffn import ops as mffn_ops
             kw = dict(kernel_kw)
             # an explicit interpret= from the caller wins over the backend
             kw.setdefault("interpret", _BACKEND_INTERPRET[backend])
-            y = mffn_ops.masked_ffn(h, p["w1p"], p["b1p"], p["w2p"], b2,
-                                    **kw)
+            y = mffn_ops.masked_ffn(h, w1p, b1p, w2p, b2, *scales, **kw)
         if "b2p" in p:
-            y = y + p["b2p"][:, None, :].astype(y.dtype)
+            b2p = _low_bias(p["b2p"]) if quant else p["b2p"]
+            y = y + b2p[:, None, :].astype(y.dtype)
         return y
     act = activation_fn(op.activation)
+    w1p = _dequantized(p["w1p"]) if quant else p["w1p"]
+    w2p = _dequantized(p["w2p"]) if quant else p["w2p"]
+    b1p = _low_bias(p["b1p"]) if quant else p["b1p"]
     lead = "bd" if h.ndim == 2 else "nbd"
-    hm = act(jnp.einsum(f"{lead},ndk->nbk", h, p["w1p"])
-             + p["b1p"][:, None, :])
-    y = jnp.einsum("nbk,nkm->nbm", hm, p["w2p"])
+    hm = act(jnp.einsum(f"{lead},ndk->nbk", h, w1p)
+             + b1p[:, None, :].astype(h.dtype))
+    y = jnp.einsum("nbk,nkm->nbm", hm, w2p)
     if "b2p" in p:
-        return y + p["b2p"][:, None, :]
-    return y + p["b2"] if "b2" in p else y
+        b2p = _low_bias(p["b2p"]) if quant else p["b2p"]
+        return y + b2p[:, None, :].astype(y.dtype)
+    if "b2" in p:
+        b2 = _low_bias(p["b2"]) if quant else p["b2"]
+        return y + b2.astype(y.dtype)
+    return y
 
 
 def execute(plan: PackedPlan, x: jax.Array, *, backend: str | None = None,
@@ -577,35 +686,46 @@ def execute(plan: PackedPlan, x: jax.Array, *, backend: str | None = None,
     "xla" | "pallas-interpret" | "pallas-tpu" force a tier (in-process A/B —
     the equivalence tests exercise xla and interpret side by side).
     kernel_kw (block_b, sample_major) forward to the kernel wrapper.
+    ``plan.precision`` int8 runs every weight through the serving quantizer
+    (kernel slots on the masked_ffn path, quantize-dequantize on the shared
+    einsum ops) — the same values the fused int8 graph computes with.
     """
+    quant = plan.precision.weights == "int8"
     h = x
     for op in plan.ops:
         if isinstance(op, Activation):
             h = activation_fn(op.fn)(h)
         elif isinstance(op, SharedDense):
             p = plan.params[op.name]
+            w = _dequantized(p["w"]) if quant else p["w"]
             if h.ndim == 2:
-                h = h @ p["w"]
+                h = h @ w
             else:
-                h = jnp.einsum("nbd,do->nbo", h, p["w"])
+                h = jnp.einsum("nbd,do->nbo", h, w)
             if "b" in p:
-                h = h + p["b"]
+                h = h + (_low_bias(p["b"]).astype(h.dtype) if quant
+                         else p["b"])
             if op.activation:
                 h = activation_fn(op.activation)(h)
         elif isinstance(op, PackedPair):
-            h = _run_pair(op, plan.params[op.name], h, backend, kernel_kw)
+            h = _run_pair(op, plan.params[op.name], h, backend, kernel_kw,
+                          plan.precision)
         elif isinstance(op, OutputHead):
             p = plan.params[op.name]
             if op.per_mask:
-                h = jnp.einsum("nbk,nko->nbo", h, p["wp"])
+                wp = _dequantized(p["wp"]) if quant else p["wp"]
+                h = jnp.einsum("nbk,nko->nbo", h, wp)
                 if "bp" in p:
-                    h = h + p["bp"][:, None, :]
+                    bp = _low_bias(p["bp"]) if quant else p["bp"]
+                    h = h + bp[:, None, :].astype(h.dtype)
             else:
+                w = _dequantized(p["w"]) if quant else p["w"]
                 lead = "bk" if h.ndim == 2 else "nbk"
                 h = jnp.einsum(f"{lead},ko->{'bo' if h.ndim == 2 else 'nbo'}",
-                               h, p["w"])
+                               h, w)
             if "b" in p:
-                h = h + p["b"]
+                h = h + (_low_bias(p["b"]).astype(h.dtype) if quant
+                         else p["b"])
             if op.activation:
                 h = activation_fn(op.activation)(h)
         else:
@@ -644,6 +764,15 @@ def lower_fused(plan: PackedPlan
     preceding dense step; a PackedPair lowers to two dense steps (its hidden
     activation becomes a VMEM-resident intermediate of the megakernel).
     Raises :class:`FusedPlanUnsupported` for op kinds with no fused form.
+
+    When ``plan.precision.weights == "int8"``, every dense weight is
+    quantized HERE — once per lowering, per-output-channel symmetric scales
+    (``distributed.compression.quantize_int8`` along each unit's fan-in) —
+    so the int8 tensor + bf16 scale pair is what the cached executors close
+    over and what crosses HBM→VMEM; the dequant happens in-kernel next to
+    the matmul. Biases store as bf16 in the same bundle. The fp32 default
+    takes the untouched path (the identical param arrays, a scale-free
+    spec), so it stays bitwise-gated.
     """
     steps: list[fused_ref.FusedStep] = []
     params: list[jax.Array] = []
@@ -690,11 +819,39 @@ def lower_fused(plan: PackedPlan
                 params.append(p["bp"])
         else:
             raise FusedPlanUnsupported(f"op {op!r} has no fused lowering")
+    if plan.precision.weights == "int8":
+        steps, params = _quantize_lowering(steps, params)
     dense = [s for s in steps if s.kind == "dense"]
     spec = fused_ref.FusedSpec(steps=tuple(steps), n_rows=plan.sample_axis,
                                n_masks=plan.n_masks, groups=plan.groups,
                                d_in=dense[0].d_in, d_out=dense[-1].d_out)
     return spec, tuple(params)
+
+
+def _quantize_lowering(steps: list, params: list
+                       ) -> tuple[list, list]:
+    """Rewrite a lowered (steps, params) chain to the int8 serving bundle:
+    each dense step's ``w`` becomes (int8 q, bf16 per-output-channel scale)
+    and the step is tagged ``w_dtype="int8"`` (which makes ``param_slots``
+    emit the extra 'ws' slot); bias params store as bf16."""
+    new_steps: list = []
+    new_params: list = []
+    pi = 0
+    for st in steps:
+        if st.kind != "dense":
+            new_steps.append(st)
+            continue
+        q, s = _quantize_weight(params[pi])
+        pi += 1
+        new_steps.append(dataclasses.replace(st, w_dtype="int8"))
+        new_params += [q, s]
+        if st.shared_bias:
+            new_params.append(_low_bias(params[pi]))
+            pi += 1
+        if st.sample_bias:
+            new_params.append(_low_bias(params[pi]))
+            pi += 1
+    return new_steps, new_params
 
 
 #: Trace counters of the cached fused executors, keyed by
@@ -714,20 +871,25 @@ _RETRACES = obs_registry.REGISTRY.counter(
 _DISPATCH = obs_registry.REGISTRY.counter(
     "kernel_dispatch_total",
     "kernel-backend tier selected at executor trace time",
-    labels=("tier",))
+    labels=("tier", "precision"))
 
 
-def _note_trace(stage: str, backend: str | None) -> None:
+def _note_trace(stage: str, backend: str | None,
+                precision: str = "fp32") -> None:
     """Registry + tracer breadcrumbs of ONE jit trace of a cached executor.
     Runs at trace time only — zero steady-state cost; an idle serving loop
     must leave ``retrace_total`` flat (the no-retrace observable the
-    tracing-overhead gate in benchmarks/bench_serving.py checks)."""
+    tracing-overhead gate in benchmarks/bench_serving.py checks).
+    ``precision`` labels the dispatch ("fp32", "int8" weights, or the
+    serving path's KV tag, e.g. "kv-bfloat16") so precision regressions
+    show in the registry snapshot."""
     from repro import compat
     tier = backend if backend is not None else compat.kernel_backend()
     _RETRACES.inc(stage=stage, backend=backend or "auto")
-    _DISPATCH.inc(tier=tier)
+    _DISPATCH.inc(tier=tier, precision=precision)
     obs_trace.TRACER.event("retrace", stage=stage,
-                           backend=backend or "auto", tier=tier)
+                           backend=backend or "auto", tier=tier,
+                           precision=precision)
 
 
 @functools.lru_cache(maxsize=128)
@@ -738,9 +900,12 @@ def _fused_runner(spec: fused_ref.FusedSpec, backend: str | None,
     is stable across calls, so jit's own shape cache applies and repeated
     ``predict_packed`` calls stop retracing."""
 
+    prec = ("int8" if any(s.w_dtype == "int8" for s in spec.steps)
+            else "fp32")
+
     def run(x: jax.Array, params: tuple[jax.Array, ...]):
         fused_trace_counts[(spec, backend, moments)] += 1
-        _note_trace("fused_plan", backend)
+        _note_trace("fused_plan", backend, prec)
         if backend == "xla":
             fn = (fused_ref.fused_moments_ref if moments
                   else fused_ref.fused_plan_ref)
@@ -834,6 +999,13 @@ def lower_fused_decode(cfg, *, expand_masks: bool = True
         raise FusedPlanUnsupported("encoder-only config has no decode step")
     if cfg.m_rope_sections:
         raise FusedPlanUnsupported("M-RoPE decode has no fused lowering")
+    kv_dtype = getattr(cfg, "kv_dtype", "")
+    if kv_dtype == "int8":
+        # int8 caches carry per-position scale leaves the single-program
+        # decode kernel does not thread; the per-op path serves them.
+        raise FusedPlanUnsupported(
+            "int8 KV cache has no fused decode lowering (per-op path "
+            "dequantizes at the attention gather)")
     d, dh = cfg.d_model, cfg.resolved_head_dim
     rot = int(dh * cfg.rope_pct)
     rot -= rot % 2
@@ -876,7 +1048,8 @@ def lower_fused_decode(cfg, *, expand_masks: bool = True
                                      shared_bias=ln_bias, d_in=d, d_out=d))
     steps.append(fused_ref.FusedStep("dense", d_in=d, d_out=cfg.vocab_size))
     return fused_ref.FusedDecodeSpec(steps=tuple(steps), n_samples=n,
-                                     d_model=d, vocab=cfg.vocab_size)
+                                     d_model=d, vocab=cfg.vocab_size,
+                                     kv_dtype=kv_dtype)
 
 
 def _decode_mask_ids(cfg, rows: int, expand_masks: bool) -> jax.Array:
@@ -996,10 +1169,11 @@ def _decode_runner(cfg, expand_masks: bool, backend: str | None):
     spec = lower_fused_decode(cfg, expand_masks=expand_masks)
     rot = next(s.rot_dim for s in spec.steps if s.kind == "attn")
     donate = (1,) if jax.default_backend() != "cpu" else ()
+    prec = f"kv-{spec.kv_dtype}" if spec.kv_dtype else "fp32"
 
     def run(params, caches, tokens, pos):
         fused_trace_counts[(spec, backend, "decode")] += 1
-        _note_trace("decode", backend)
+        _note_trace("decode", backend, prec)
         from repro.models import layers
         rows = tokens.shape[0]
         p = jnp.asarray(pos, jnp.int32)
@@ -1126,10 +1300,11 @@ def _prefill_runner(cfg, expand_masks: bool, bucket: int, max_seq: int,
     spec = prefill_fused_spec(cfg, expand_masks=expand_masks)
     bayes = cfg.bayesian and expand_masks
     n = cfg.mask_samples if bayes else 1
+    prec = f"kv-{spec.kv_dtype}" if spec.kv_dtype else "fp32"
 
     def run(params, tokens, length):
         fused_trace_counts[(spec, backend, "prefill", bucket, max_seq)] += 1
-        _note_trace("prefill", backend)
+        _note_trace("prefill", backend, prec)
         from repro.models import transformer
         rows = tokens.shape[0]
         ids = jnp.repeat(jnp.arange(n), rows // n) if bayes else None
@@ -1176,16 +1351,21 @@ def decode_stage_traffic(spec: fused_ref.FusedDecodeSpec, rows: int,
     activation traffic and the launch count. Sums field-for-field to
     :func:`decode_traffic` (asserted in tests/test_obs.py) — the
     ``model_fidelity`` breakdown ``obs.crosscheck`` stamps into
-    BENCH_serving.json."""
+    BENCH_serving.json.
+
+    Pricing is per tensor family: weights at ``bytes_per_el``, KV-cache k/v
+    rows at the spec's ``kv_dtype`` width (int8 adds its per-position f32
+    scale leaves), and the int32 ``kpos`` bookkeeping at its true 4 bytes."""
     d, v, n = spec.d_model, spec.vocab, spec.n_samples
     b = rows // n
+    kv_b = _dtype_bytes(spec.kv_dtype, bytes_per_el)
     acc: dict[str, list[int]] = {}
 
-    def add(kind: str, w: int = 0, cache: int = 0, fl: int = 0) -> None:
-        cur = acc.setdefault(kind, [0, 0, 0])
-        cur[0] += w
-        cur[1] += cache
-        cur[2] += fl
+    def add(kind: str, w: int = 0, kv: int = 0, pos: int = 0,
+            scale: int = 0, fl: int = 0) -> None:
+        cur = acc.setdefault(kind, [0, 0, 0, 0, 0])
+        for j, inc in enumerate((w, kv, pos, scale, fl)):
+            cur[j] += inc
 
     layers_l = 0
     for st in spec.steps:
@@ -1197,9 +1377,11 @@ def decode_stage_traffic(spec: fused_ref.FusedDecodeSpec, rows: int,
             proj = d * hh * dh + 2 * d * hkv * dh + hh * dh * d
             if st.qkv_bias:
                 proj += hh * dh + 2 * hkv * dh
-            add("attn", w=proj,
-                cache=rows * hkv * smax * dh * 2 + rows * smax
-                + rows * hkv * dh * 2 + rows,
+            kv_el = rows * hkv * smax * dh * 2 + rows * hkv * dh * 2
+            scale_el = (rows * hkv * smax + rows * hkv
+                        if spec.kv_dtype == "int8" else 0)
+            add("attn", w=proj, kv=kv_el, pos=rows * smax + rows,
+                scale=scale_el,
                 fl=2 * rows * proj + 4 * rows * hh * dh * (smax + 1))
             layers_l += 1
         elif st.kind == "ffn":
@@ -1225,8 +1407,9 @@ def decode_stage_traffic(spec: fused_ref.FusedDecodeSpec, rows: int,
             + b * v + b
         launches = 2 * layers_l + 2
     out = {kind: sched_lib.TrafficModel(
-        weight_bytes=(w + cache) * bytes_per_el, act_bytes=0, flops=fl,
-        weight_loads=0) for kind, (w, cache, fl) in acc.items()}
+        weight_bytes=w * bytes_per_el + kv * kv_b + pos * 4 + scale * 4,
+        act_bytes=0, flops=fl, weight_loads=0)
+        for kind, (w, kv, pos, scale, fl) in acc.items()}
     out["interstage"] = sched_lib.TrafficModel(
         weight_bytes=0, act_bytes=act_el * bytes_per_el, flops=0,
         weight_loads=launches)

@@ -123,13 +123,17 @@ class SlotSchedule:
                 f"plan {other} vs pool {self} (n_masks must match)")
 
     def decode_traffic(self, d_in: int, k_hidden: int, d_out: int,
-                       bytes_per_el: int = 2) -> TrafficModel:
+                       bytes_per_el: int = 2, *,
+                       weight_bytes_per_el: int | None = None
+                       ) -> TrafficModel:
         """Per-decode-step FFN traffic of a full pool: the batch-level
         schedule over ``max_slots`` resident requests — the quantity
         continuous batching amortizes (weights touched N times per step no
-        matter how many requests are in flight)."""
+        matter how many requests are in flight). ``weight_bytes_per_el``
+        prices the weight matrices separately (quantized serving)."""
         return traffic_model(Schedule("batch"), self.max_slots, self.n_masks,
-                             d_in, k_hidden, d_out, bytes_per_el)
+                             d_in, k_hidden, d_out, bytes_per_el,
+                             weight_bytes_per_el=weight_bytes_per_el)
 
 
 def run_batch_level(apply_fn: ApplyFn, params: Params, x: jax.Array,
@@ -197,16 +201,25 @@ class TrafficModel:
 
 def traffic_model(schedule: Schedule, batch: int, n_samples: int,
                   d_in: int, k_hidden: int, d_out: int,
-                  bytes_per_el: int = 2) -> TrafficModel:
+                  bytes_per_el: int = 2, *,
+                  weight_bytes_per_el: int | None = None,
+                  act_bytes_per_el: int | None = None) -> TrafficModel:
     """Analytic traffic for a packed 2-layer FFN under a schedule.
 
     The per-sample packed weight set is w1p [d_in,K] + w2p [K,d_out]; the
-    schedule determines how many times it crosses HBM→VMEM.
+    schedule determines how many times it crosses HBM→VMEM. A mixed-precision
+    evaluation is priced per tensor: ``weight_bytes_per_el`` covers the two
+    weight *matrices* (e.g. 1 for int8-packed serving; biases stay at
+    ``bytes_per_el``) and ``act_bytes_per_el`` the activations — both default
+    to the uniform ``bytes_per_el``.
     """
-    per_sample_w = (d_in * k_hidden + k_hidden * d_out + k_hidden + d_out)
+    wb = bytes_per_el if weight_bytes_per_el is None else weight_bytes_per_el
+    ab = bytes_per_el if act_bytes_per_el is None else act_bytes_per_el
+    per_sample_w = (d_in * k_hidden + k_hidden * d_out) * wb \
+        + (k_hidden + d_out) * bytes_per_el
     loads = weight_load_counts(schedule, batch, n_samples)
-    weight_bytes = per_sample_w * bytes_per_el * (loads // n_samples) * n_samples
-    act_bytes = (batch * d_in + n_samples * batch * d_out) * bytes_per_el
+    weight_bytes = per_sample_w * (loads // n_samples) * n_samples
+    act_bytes = (batch * d_in + n_samples * batch * d_out) * ab
     flops = 2 * n_samples * batch * (d_in * k_hidden + k_hidden * d_out)
     return TrafficModel(weight_bytes=weight_bytes, act_bytes=act_bytes,
                         flops=flops, weight_loads=loads)

@@ -49,8 +49,15 @@ from repro.kernels.fused_plan import ref as _spec_lib
 __all__ = ["fused_plan_pallas", "fused_decode_pallas"]
 
 
-def _dense(h, w, b, bp, activation):
-    """One fused dense step on f32 hidden state (operands in weight dtype)."""
+def _dense(h, w, ws, b, bp, activation):
+    """One fused dense step on f32 hidden state (operands in weight dtype).
+
+    ``ws`` (present iff the step's weight is quantized) holds the
+    per-output-channel bf16 dequant scales [1, d_out_pad]; the dequant
+    happens here — in VMEM, right next to the matmul — so the int8 tensor
+    is what crossed HBM."""
+    if ws is not None:
+        w = w.astype(jnp.float32) * ws.astype(jnp.float32)
     y = jnp.dot(h.astype(w.dtype), w, preferred_element_type=jnp.float32)
     if b is not None:
         y = y + b[None, :].astype(jnp.float32)
@@ -75,6 +82,7 @@ def _run_chain(steps, read, h, sbufs):
             h = _spec_lib.act_fn(st.activation)(h)
             continue
         y = _dense(h, read(i, "w"),
+                   read(i, "ws") if st.w_dtype else None,
                    read(i, "b") if st.shared_bias else None,
                    read(i, "bp") if st.sample_bias else None,
                    st.activation)
@@ -130,7 +138,7 @@ def fused_plan_pallas(x: jax.Array, params: tuple[jax.Array, ...], *,
         for (i, slot) in slots:
             arr = table[(i, slot)]
             st = spec.steps[i]
-            per = st.per_sample if slot == "w" else (slot == "bp")
+            per = st.per_sample if slot in ("w", "ws") else (slot == "bp")
             if per:
                 blk = (1,) + arr.shape[1:]
                 in_specs.append(pl.BlockSpec(
@@ -147,7 +155,7 @@ def fused_plan_pallas(x: jax.Array, params: tuple[jax.Array, ...], *,
             def read(i, slot):
                 st = spec.steps[i]
                 r = p_refs[(i, slot)]
-                per = st.per_sample if slot == "w" else (slot == "bp")
+                per = st.per_sample if slot in ("w", "ws") else (slot == "bp")
                 return r[0] if per else r[...]
 
             h = _run_chain(list(enumerate(spec.steps)), read,
@@ -196,7 +204,7 @@ def fused_plan_pallas(x: jax.Array, params: tuple[jax.Array, ...], *,
                 def read(i, slot, r=r):
                     st = spec.steps[i]
                     ref = p_refs[(i, slot)]
-                    per = st.per_sample if slot == "w" else (slot == "bp")
+                    per = st.per_sample if slot in ("w", "ws") else (slot == "bp")
                     return ref[r] if per else ref[...]
 
                 y = _run_chain(body, read, pfx_ref[:, :w0], sbufs)

@@ -48,10 +48,13 @@ def _pad_params(spec: FusedSpec, params: tuple[jax.Array, ...]
     out = []
     for (i, slot), arr in zip(param_slots(spec), params):
         st = spec.steps[i]
-        per = st.per_sample if slot == "w" else (slot == "bp")
+        per = st.per_sample if slot in ("w", "ws") else (slot == "bp")
         if per and arr.shape[0] != spec.n_rows:
             raise ValueError(f"step {i} {slot}: leading dim {arr.shape[0]} "
                              f"!= n_rows {spec.n_rows}")
+        # 'ws' scales [.., 1, d_out] lane-pad with their weight's d_out axis
+        # only (the broadcast axis stays 1); zero scales on padded columns
+        # are exact — the padded w columns are zero too.
         a = _pad_to(arr, arr.ndim - 1, 128)
         if slot == "w":
             a = _pad_to(a, arr.ndim - 2, 128)
@@ -66,22 +69,25 @@ def fused_vmem_bytes(spec: FusedSpec, block_b: int = 128,
     def pad(d: int) -> int:
         return -(-d // 128) * 128
 
-    w_el = 0
+    w_bytes = 0
     widths = [spec.d_in]
     for st in spec.steps:
         if st.kind != "dense":
             continue
         rows = spec.n_rows if st.per_sample else 1
-        w_el += rows * pad(st.d_in) * pad(st.d_out)
+        wb = 1 if st.w_dtype == "int8" else bytes_per_el
+        w_bytes += rows * pad(st.d_in) * pad(st.d_out) * wb
+        if st.w_dtype:                  # bf16 per-channel scales, lane-padded
+            w_bytes += rows * pad(st.d_out) * 2
         if st.shared_bias:
-            w_el += pad(st.d_out)
+            w_bytes += pad(st.d_out) * bytes_per_el
         if st.sample_bias:
-            w_el += spec.n_rows * pad(st.d_out)
+            w_bytes += spec.n_rows * pad(st.d_out) * bytes_per_el
         widths.append(st.d_out)
     wmax = max(pad(d) for d in widths)
     scratch_el = 3 * block_b * wmax + block_b * pad(widths[0])
     out_el = 2 * block_b * spec.groups * pad(widths[-1])
-    return (w_el + scratch_el + out_el) * bytes_per_el
+    return w_bytes + (scratch_el + out_el) * bytes_per_el
 
 
 @functools.partial(jax.jit,

@@ -101,6 +101,10 @@ class FusedStep:
     masked: bool = False            # kind='ffn': mask-matrix multiply form
     ffn_bias: bool = False          # kind='ffn': plain-MLP biases on wu/wd
     d_hidden: int = 0               # kind='ffn': hidden width (F or keep K)
+    # --- precision (default "" keeps fp32 specs hash/eq-identical) ---------
+    w_dtype: str = ""               # kind='dense': "" (native) | "int8" —
+    #                                 int8 adds a 'ws' scale slot after 'w'
+    #                                 and the tiers dequantize in-kernel
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,12 +141,18 @@ class FusedSpec:
 
 
 def param_slots(spec: FusedSpec) -> tuple[tuple[int, str], ...]:
-    """Flat param ordering: (step index, 'w'|'b'|'bp') per array."""
+    """Flat param ordering: (step index, 'w'|'ws'|'b'|'bp') per array.
+
+    'ws' (per-output-channel dequant scales, bf16
+    ``w.shape[:-2] + (1, d_out)``) is emitted right after 'w' iff the step
+    carries a quantized weight (``w_dtype``)."""
     slots: list[tuple[int, str]] = []
     for i, st in enumerate(spec.steps):
         if st.kind != "dense":
             continue
         slots.append((i, "w"))
+        if st.w_dtype:
+            slots.append((i, "ws"))
         if st.shared_bias:
             slots.append((i, "b"))
         if st.sample_bias:
@@ -174,6 +184,9 @@ def fused_plan_ref(spec: FusedSpec, x: jax.Array,
             h = act_fn(st.activation)(h)
             continue
         w = table[(i, "w")]
+        if st.w_dtype:              # in-place dequant: q * per-channel scale
+            w = w.astype(jnp.float32) \
+                * table[(i, "ws")].astype(jnp.float32)
         if st.per_sample:
             lead = "bd" if h.ndim == 2 else "nbd"
             y = jnp.einsum(f"{lead},ndk->nbk", h, w)
@@ -226,6 +239,10 @@ class FusedDecodeSpec:
     n_samples: int                  # posterior sample count (1 = degenerate)
     d_model: int
     vocab: int
+    kv_dtype: str = ""              # cache storage dtype ("" = model dtype;
+    #                                 "bfloat16" supported fused — attention
+    #                                 upcasts cache reads to f32; "int8"
+    #                                 caches serve per-op only)
 
     def __post_init__(self) -> None:
         if self.n_samples < 1:

@@ -57,10 +57,29 @@ def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, h_ref):
     o_ref[0] = (y + b2_ref[...][None, :].astype(jnp.float32)).astype(o_ref.dtype)
 
 
+def _ffn_kernel_q(x_ref, w1_ref, s1_ref, b1_ref, w2_ref, s2_ref, b2_ref,
+                  o_ref, h_ref):
+    """Quantized-weight variant: w1/w2 cross HBM→VMEM as int8 and are
+    dequantized here, next to the matmul, by the per-output-channel bf16
+    scales s1 [1, 1, K] / s2 [1, 1, D2] (lane-padded like the weights;
+    padded columns are zero, matching the zero weight columns)."""
+    x = x_ref[...]
+    w1 = w1_ref[0].astype(jnp.float32) * s1_ref[0].astype(jnp.float32)
+    w2 = w2_ref[0].astype(jnp.float32) * s2_ref[0].astype(jnp.float32)
+    h_ref[...] = jnp.maximum(
+        jnp.dot(x.astype(jnp.float32), w1,
+                preferred_element_type=jnp.float32)
+        + b1_ref[0][None, :].astype(jnp.float32), 0.0)
+    y = jnp.dot(h_ref[...], w2, preferred_element_type=jnp.float32)
+    o_ref[0] = (y + b2_ref[...][None, :].astype(jnp.float32)).astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "sample_major",
                                              "interpret"))
 def masked_ffn_pallas(x: jax.Array, w1p: jax.Array, b1p: jax.Array,
-                      w2p: jax.Array, b2: jax.Array, *,
+                      w2p: jax.Array, b2: jax.Array,
+                      w1s: jax.Array | None = None,
+                      w2s: jax.Array | None = None, *,
                       block_b: int = 128, sample_major: bool = True,
                       interpret: bool = False) -> jax.Array:
     """x [B, D], w1p [N, D, K], b1p [N, K], w2p [N, K, D2], b2 [D2]
@@ -69,11 +88,16 @@ def masked_ffn_pallas(x: jax.Array, w1p: jax.Array, b1p: jax.Array,
     sample_major=True  -> batch-level scheme (paper's optimization).
     sample_major=False -> sampling-level baseline (weights re-fetched per
                           batch tile); numerics identical.
+    w1s/w2s (both or neither, [N, 1, K] / [N, 1, D2] bf16): lane-padded
+    per-output-channel dequant scales of int8 w1p/w2p — dispatches the
+    quantized kernel variant.
     Shapes must already be MXU-aligned (ops.py pads).
     """
     n, d, k = w1p.shape
     b = x.shape[0]
     d2 = w2p.shape[-1]
+    if (w1s is None) != (w2s is None):
+        raise ValueError("w1s and w2s must be passed together")
     if b % block_b:
         raise ValueError(f"batch {b} not divisible by block_b {block_b}")
     nb = b // block_b
@@ -92,20 +116,35 @@ def masked_ffn_pallas(x: jax.Array, w1p: jax.Array, b1p: jax.Array,
 
     sample_ix, batch_ix = at("s"), at("b")
 
+    x_spec = pl.BlockSpec((block_b, d), lambda i, j, f=batch_ix: (f(i, j), 0))
+    w1_spec = pl.BlockSpec((1, d, k),
+                           lambda i, j, f=sample_ix: (f(i, j), 0, 0))
+    b1_spec = pl.BlockSpec((1, k), lambda i, j, f=sample_ix: (f(i, j), 0))
+    w2_spec = pl.BlockSpec((1, k, d2),
+                           lambda i, j, f=sample_ix: (f(i, j), 0, 0))
+    b2_spec = pl.BlockSpec((d2,), lambda i, j: (0,))
+    if w1s is None:
+        kernel = _ffn_kernel
+        in_specs = [x_spec, w1_spec, b1_spec, w2_spec, b2_spec]
+        args = (x, w1p, b1p, w2p, b2)
+    else:
+        kernel = _ffn_kernel_q
+        s1_spec = pl.BlockSpec((1, 1, k),
+                               lambda i, j, f=sample_ix: (f(i, j), 0, 0))
+        s2_spec = pl.BlockSpec((1, 1, d2),
+                               lambda i, j, f=sample_ix: (f(i, j), 0, 0))
+        in_specs = [x_spec, w1_spec, s1_spec, b1_spec, w2_spec, s2_spec,
+                    b2_spec]
+        args = (x, w1p, w1s, b1p, w2p, w2s, b2)
+
     return pl.pallas_call(
-        _ffn_kernel,
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_b, d), lambda i, j, f=batch_ix: (f(i, j), 0)),
-            pl.BlockSpec((1, d, k), lambda i, j, f=sample_ix: (f(i, j), 0, 0)),
-            pl.BlockSpec((1, k), lambda i, j, f=sample_ix: (f(i, j), 0)),
-            pl.BlockSpec((1, k, d2), lambda i, j, f=sample_ix: (f(i, j), 0, 0)),
-            pl.BlockSpec((d2,), lambda i, j: (0,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, block_b, d2),
             lambda i, j, fs=sample_ix, fb=batch_ix: (fs(i, j), fb(i, j), 0)),
         out_shape=jax.ShapeDtypeStruct((n, b, d2), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_b, k), jnp.float32)],
         interpret=interpret,
-    )(x, w1p, b1p, w2p, b2)
+    )(*args)

@@ -40,17 +40,26 @@ def on_tpu() -> bool:
 @functools.partial(jax.jit, static_argnames=("block_b", "sample_major",
                                              "interpret"))
 def masked_ffn(x: jax.Array, w1p: jax.Array, b1p: jax.Array,
-               w2p: jax.Array, b2: jax.Array, *,
+               w2p: jax.Array, b2: jax.Array,
+               w1s: jax.Array | None = None,
+               w2s: jax.Array | None = None, *,
                block_b: int = 128, sample_major: bool = True,
                interpret: bool | None = None) -> jax.Array:
     """Packed N-sample masked FFN, MXU-aligned and batch-tiled.
 
     x [B, D], w1p [N, D, K], b1p [N, K], w2p [N, K, D2], b2 [D2] -> [N, B, D2].
+    w1s/w2s (optional, [N, 1, K] / [N, 1, D2] bf16): per-output-channel
+    dequant scales of int8 w1p/w2p — the quantized serving form; dequant
+    happens in VMEM next to the matmul (or in the oracle on the xla tier).
     Zero-padding D/K/D2 to 128 and B to block_b is exact (relu(0)=0 and the
-    padded w2p rows are zero). interpret=None -> auto (True off-TPU).
+    padded w2p rows are zero; padded scale columns pair with zero weight
+    columns).
+    interpret=None -> auto (True off-TPU).
     """
+    if (w1s is None) != (w2s is None):
+        raise ValueError("w1s and w2s must be passed together")
     if compat.kernel_backend_for(_kernel) == "xla":
-        return _ref.masked_ffn_ref(x, w1p, b1p, w2p, b2)
+        return _ref.masked_ffn_ref(x, w1p, b1p, w2p, b2, w1s, w2s)
     if interpret is None:
         interpret = compat.pallas_interpret_default()
     b, d2 = x.shape[0], w2p.shape[-1]
@@ -60,7 +69,11 @@ def masked_ffn(x: jax.Array, w1p: jax.Array, b1p: jax.Array,
     b1p_ = _pad_to(b1p, 1, 128)
     w2p_ = _pad_to(_pad_to(w2p, 1, 128), 2, 128)
     b2_ = _pad_to(b2, 0, 128)
-    y = _kernel.masked_ffn_pallas(xp, w1p_, b1p_, w2p_, b2_,
+    scales = {}
+    if w1s is not None:
+        scales["w1s"] = _pad_to(w1s, 2, 128)
+        scales["w2s"] = _pad_to(w2s, 2, 128)
+    y = _kernel.masked_ffn_pallas(xp, w1p_, b1p_, w2p_, b2_, **scales,
                                   block_b=block_b,
                                   sample_major=sample_major,
                                   interpret=interpret)

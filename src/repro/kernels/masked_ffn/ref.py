@@ -9,13 +9,25 @@ __all__ = ["masked_ffn_ref", "unpacked_masked_ffn_ref"]
 
 
 def masked_ffn_ref(x: jax.Array, w1p: jax.Array, b1p: jax.Array,
-                   w2p: jax.Array, b2: jax.Array) -> jax.Array:
-    """Packed N-sample FFN: [B,D] x [N,D,K] -> [N,B,D2] (fp32 accumulate)."""
+                   w2p: jax.Array, b2: jax.Array,
+                   w1s: jax.Array | None = None,
+                   w2s: jax.Array | None = None) -> jax.Array:
+    """Packed N-sample FFN: [B,D] x [N,D,K] -> [N,B,D2] (fp32 accumulate).
+
+    ``w1s``/``w2s`` (optional, [N, 1, K] / [N, 1, D2] bf16) are
+    per-output-channel dequant scales of int8 ``w1p``/``w2p`` — the oracle
+    dequantizes exactly as the kernel tier does
+    (``q.astype(f32) * scale.astype(f32)``)."""
+    w1 = w1p if w1s is None else \
+        w1p.astype(jnp.float32) * w1s.astype(jnp.float32)
+    w2 = w2p if w2s is None else \
+        w2p.astype(jnp.float32) * w2s.astype(jnp.float32)
     h = jnp.maximum(
-        jnp.einsum("bd,ndk->nbk", x, w1p,
+        jnp.einsum("bd,ndk->nbk", x, w1,
                    preferred_element_type=jnp.float32)
         + b1p[:, None, :].astype(jnp.float32), 0.0)
-    y = jnp.einsum("nbk,nkm->nbm", h.astype(x.dtype), w2p,
+    y = jnp.einsum("nbk,nkm->nbm",
+                   h.astype(x.dtype if w2s is None else jnp.float32), w2,
                    preferred_element_type=jnp.float32)
     return (y + b2[None, None, :].astype(jnp.float32)).astype(x.dtype)
 

@@ -303,14 +303,21 @@ def attention_banded(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 def attention_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
-                     kpos: jax.Array, pos: jax.Array) -> jax.Array:
+                     kpos: jax.Array, pos: jax.Array,
+                     k_scale: jax.Array | None = None,
+                     v_scale: jax.Array | None = None) -> jax.Array:
     """One-token decode: q [B,H,1,dh] vs cache [B,Hkv,Smax,dh]. ``kpos``
     [B,Smax] holds the global position stored in each row's cache slot
     (-1 = empty); slots with kpos > pos or kpos < 0 are masked (covers both
     the linear cache and the rolling local-window cache). ``pos`` is a
     scalar (whole batch at one position) or per-row [B] (continuous
-    batching: every row decodes at its own position)."""
+    batching: every row decodes at its own position). ``k_scale``/
+    ``v_scale`` [B,Hkv,Smax] dequantize an int8 cache at the gather
+    (per-slot symmetric scales from :func:`quantize_kv`)."""
     dh = q.shape[-1]
+    if k_scale is not None:
+        k_cache = k_cache.astype(jnp.float32) * k_scale[..., None]
+        v_cache = v_cache.astype(jnp.float32) * v_scale[..., None]
     s = _grouped_scores(q, k_cache) / math.sqrt(dh)     # [B,Hkv,G,1,Smax]
     pos = jnp.asarray(pos, jnp.int32)
     qpos = pos[:, None] if pos.ndim else pos
@@ -325,22 +332,50 @@ def attention_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 # ---------------------------------------------------------------------------
 
 
-def init_kv_cache(batch: int, n_kv: int, max_seq: int, dh: int, dtype
-                  ) -> Params:
-    return {
-        "k": jnp.zeros((batch, n_kv, max_seq, dh), dtype),
-        "v": jnp.zeros((batch, n_kv, max_seq, dh), dtype),
+def kv_store_dtype(dtype, kv_dtype: str = ""):
+    """Cache storage dtype for a ``ModelConfig.kv_dtype`` tag."""
+    return {"": dtype, "bfloat16": jnp.bfloat16, "int8": jnp.int8}[kv_dtype]
+
+
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-(row, head, position) symmetric int8 of K/V [..., S, dh] ->
+    (q int8 same shape, scale f32 [..., S]) — one scale per cached vector,
+    the granularity the decode gather dequantizes at."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def init_kv_cache(batch: int, n_kv: int, max_seq: int, dh: int, dtype,
+                  kv_dtype: str = "") -> Params:
+    store = kv_store_dtype(dtype, kv_dtype)
+    out = {
+        "k": jnp.zeros((batch, n_kv, max_seq, dh), store),
+        "v": jnp.zeros((batch, n_kv, max_seq, dh), store),
         "kpos": jnp.full((batch, max_seq), -1, jnp.int32),
     }
+    if kv_dtype == "int8":
+        out["kscale"] = jnp.zeros((batch, n_kv, max_seq), jnp.float32)
+        out["vscale"] = jnp.zeros((batch, n_kv, max_seq), jnp.float32)
+    return out
 
 
-def kv_cache_specs(batch: int, n_kv: int, max_seq: int, dh: int, dtype
-                   ) -> Params:
-    return {
-        "k": jax.ShapeDtypeStruct((batch, n_kv, max_seq, dh), dtype),
-        "v": jax.ShapeDtypeStruct((batch, n_kv, max_seq, dh), dtype),
+def kv_cache_specs(batch: int, n_kv: int, max_seq: int, dh: int, dtype,
+                   kv_dtype: str = "") -> Params:
+    store = kv_store_dtype(dtype, kv_dtype)
+    out = {
+        "k": jax.ShapeDtypeStruct((batch, n_kv, max_seq, dh), store),
+        "v": jax.ShapeDtypeStruct((batch, n_kv, max_seq, dh), store),
         "kpos": jax.ShapeDtypeStruct((batch, max_seq), jnp.int32),
     }
+    if kv_dtype == "int8":
+        out["kscale"] = jax.ShapeDtypeStruct((batch, n_kv, max_seq),
+                                             jnp.float32)
+        out["vscale"] = jax.ShapeDtypeStruct((batch, n_kv, max_seq),
+                                             jnp.float32)
+    return out
 
 
 def kv_cache_update(cache: Params, k_new: jax.Array, v_new: jax.Array,
@@ -349,10 +384,20 @@ def kv_cache_update(cache: Params, k_new: jax.Array, v_new: jax.Array,
 
     ``pos`` is a scalar (uniform batch — one dynamic-slice write) or a
     per-row [B] vector (continuous batching — each row writes its own slot
-    via a batched scatter)."""
+    via a batched scatter). The fresh k/v are cast to the cache's storage
+    dtype *at commit* (bf16 caches write narrowed values; attention reads
+    upcast) — an int8 cache (``kscale``/``vscale`` leaves present)
+    quantizes per cached vector via :func:`quantize_kv` instead."""
     b, _, smax, _ = cache["k"].shape
     pos = jnp.asarray(pos, jnp.int32)
     slot = ((pos % window) if window else pos) % smax
+    quant = "kscale" in cache
+    if quant:
+        k_new, k_sc = quantize_kv(k_new)
+        v_new, v_sc = quantize_kv(v_new)
+    else:
+        k_new = k_new.astype(cache["k"].dtype)
+        v_new = v_new.astype(cache["v"].dtype)
     if pos.ndim == 0:
         k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot,
                                                 axis=2)
@@ -360,12 +405,22 @@ def kv_cache_update(cache: Params, k_new: jax.Array, v_new: jax.Array,
                                                 axis=2)
         kpos = jax.lax.dynamic_update_slice_in_dim(
             cache["kpos"], jnp.broadcast_to(pos, (b, 1)), slot, axis=1)
-        return {"k": k, "v": v, "kpos": kpos}
+        out = {"k": k, "v": v, "kpos": kpos}
+        if quant:
+            out["kscale"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["kscale"], k_sc, slot, axis=2)
+            out["vscale"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["vscale"], v_sc, slot, axis=2)
+        return out
     bidx = jnp.arange(b)
     k = cache["k"].at[bidx, :, slot].set(k_new[:, :, 0])
     v = cache["v"].at[bidx, :, slot].set(v_new[:, :, 0])
     kpos = cache["kpos"].at[bidx, slot].set(pos)
-    return {"k": k, "v": v, "kpos": kpos}
+    out = {"k": k, "v": v, "kpos": kpos}
+    if quant:
+        out["kscale"] = cache["kscale"].at[bidx, :, slot].set(k_sc[:, :, 0])
+        out["vscale"] = cache["vscale"].at[bidx, :, slot].set(v_sc[:, :, 0])
+    return out
 
 
 # ---------------------------------------------------------------------------

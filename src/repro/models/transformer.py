@@ -109,10 +109,10 @@ def _block_cache_spec(kind: str, cfg: ModelConfig, batch: int, max_seq: int,
     dh = cfg.resolved_head_dim
     mk_kv = layers.kv_cache_specs if as_spec else layers.init_kv_cache
     if kind in ("attn", "moe"):
-        return mk_kv(batch, cfg.n_kv_heads, max_seq, dh, dtype)
+        return mk_kv(batch, cfg.n_kv_heads, max_seq, dh, dtype, cfg.kv_dtype)
     if kind == "local_attn":
         w = min(cfg.local_window or max_seq, max_seq)
-        return mk_kv(batch, cfg.n_kv_heads, w, dh, dtype)
+        return mk_kv(batch, cfg.n_kv_heads, w, dh, dtype, cfg.kv_dtype)
     if kind == "rec":
         fn = rglru.rec_state_specs if as_spec else rglru.rec_state_init
         return fn(batch, cfg, dtype)
@@ -203,9 +203,14 @@ def cache_trim_positions(caches, length):
     n = jnp.asarray(length, jnp.int32)
 
     def trim(path, leaf):
-        if "kpos" in jax.tree_util.keystr(path):
+        key = jax.tree_util.keystr(path)
+        if "kpos" in key:
             keep = jnp.arange(leaf.shape[-1]) < n          # [smax]
             return jnp.where(keep, leaf, -1)
+        if "kscale" in key or "vscale" in key:
+            # int8-cache scales: [reps, B, hkv, smax] — slot axis is last
+            keep = jnp.arange(leaf.shape[-1]) < n
+            return jnp.where(keep, leaf, jnp.zeros((), leaf.dtype))
         # k/v: [reps, B, hkv, smax, dh] — slot axis is -2
         keep = (jnp.arange(leaf.shape[-2]) < n)[:, None]
         return jnp.where(keep, leaf, jnp.zeros((), leaf.dtype))
@@ -285,7 +290,9 @@ def _attention_sublayer(cfg: ModelConfig, p: Params, x: jax.Array, rope,
     if mode == "decode":
         new_cache = layers.kv_cache_update(cache, k, v, pos, window)
         attn = layers.attention_decode(q, new_cache["k"], new_cache["v"],
-                                       new_cache["kpos"], pos)
+                                       new_cache["kpos"], pos,
+                                       new_cache.get("kscale"),
+                                       new_cache.get("vscale"))
     else:
         s = x.shape[1]
         # s == window takes the full path below; attention_banded's own
@@ -327,11 +334,22 @@ def _attention_sublayer(cfg: ModelConfig, p: Params, x: jax.Array, rope,
             kept_pos = jnp.arange(s - keep, s, dtype=jnp.int32)
             slots = kept_pos % smax
             shp = (x.shape[0], k.shape[1], smax, k.shape[-1])
-            ks = jnp.zeros(shp, k.dtype).at[:, :, slots].set(k[:, :, -keep:])
-            vs = jnp.zeros(shp, v.dtype).at[:, :, slots].set(v[:, :, -keep:])
+            kk, vk = k[:, :, -keep:], v[:, :, -keep:]
+            store = layers.kv_store_dtype(k.dtype, cfg.kv_dtype)
+            new_cache = {}
+            if cfg.kv_dtype == "int8":
+                kk, k_sc = layers.quantize_kv(kk)
+                vk, v_sc = layers.quantize_kv(vk)
+                sshp = shp[:-1]
+                new_cache["kscale"] = jnp.zeros(
+                    sshp, jnp.float32).at[:, :, slots].set(k_sc)
+                new_cache["vscale"] = jnp.zeros(
+                    sshp, jnp.float32).at[:, :, slots].set(v_sc)
+            ks = jnp.zeros(shp, store).at[:, :, slots].set(kk.astype(store))
+            vs = jnp.zeros(shp, store).at[:, :, slots].set(vk.astype(store))
             kpos = jnp.full((smax,), -1, jnp.int32).at[slots].set(kept_pos)
             kpos = jnp.broadcast_to(kpos[None], (x.shape[0], smax))
-            new_cache = {"k": ks, "v": vs, "kpos": kpos}
+            new_cache.update(k=ks, v=vs, kpos=kpos)
     return x + layers.dense(p["attn"]["wo"], layers._merge_heads(attn)), \
         new_cache
 

@@ -467,6 +467,11 @@ class ServerConfig:
                                       # admission prefill length buckets:
                                       # None = power-of-two auto set,
                                       # () = exact per-length prefill
+    kv_dtype: str = ""                # pool KV storage: "" = inherit the
+                                      # model config's kv_dtype, "bfloat16"
+                                      # (fused-decode supported), "int8"
+                                      # (+ per-vector scales; decode runs
+                                      # the per-op path)
     trace: bool = False               # enable span tracing on the process
                                       # tracer (obs.trace.TRACER) — one
                                       # record per lifecycle event; off by
@@ -490,6 +495,8 @@ class ServerConfig:
             raise ValueError(
                 f"max_prompt_len {self.max_prompt_len} and max_new_tokens "
                 f"{self.max_new_tokens} must be >= 1")
+        if self.kv_dtype not in ("", "bfloat16", "int8"):
+            raise ValueError(f"unknown kv_dtype {self.kv_dtype!r}")
         if self.prefill_buckets is not None:
             # normalize (frozen dataclass: bypass immutability once) and
             # validate loudly — a non-positive bucket would otherwise
@@ -533,7 +540,14 @@ class BayesianLMServer:
             mesh
         self.schedule = scheduler_lib.SlotSchedule(model.cfg.mask_samples,
                                                    cfg.max_slots)
-        self.steps = step_fns(model, fused=cfg.fused,
+        # cfg.kv_dtype rewrites the MODEL config the steps/caches build
+        # against — one knob on the server, no model surgery at call sites
+        # ("" inherits whatever the model config already says)
+        mcfg = model.cfg
+        if cfg.kv_dtype and cfg.kv_dtype != mcfg.kv_dtype:
+            mcfg = dataclasses.replace(mcfg, kv_dtype=cfg.kv_dtype)
+        self.model_cfg = mcfg
+        self.steps = step_fns(mcfg, fused=cfg.fused,
                               prefill_buckets=cfg.prefill_buckets)
         # donate the pool on scatter (admission overwrites rows in place);
         # CPU has no donation support and warns, so only donate off-CPU
@@ -541,7 +555,7 @@ class BayesianLMServer:
                                 donate_argnums=_donate_argnums(0))
         self._reset = jax.jit(transformer.cache_reset_rows,
                               donate_argnums=_donate_argnums(0))
-        self._caches = transformer.init_cache(model.cfg, self.schedule.rows,
+        self._caches = transformer.init_cache(mcfg, self.schedule.rows,
                                               cfg.max_seq)
         self._slots: list[int | None] = [None] * cfg.max_slots
         self._queue: list[tuple[int, int, int]] = []   # (prio, seq, req_id)
