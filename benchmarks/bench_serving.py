@@ -39,6 +39,18 @@ interleaved with the LM trace. Gates: the pooled scan moments must be
 bitwise-identical to the direct ``engine.predict_volume`` path, and the LM
 tokens must be unchanged by the co-resident scans.
 
+``--chaos`` adds the fault-tolerance leg: the same LM trace through a
+3-host :class:`repro.serving.router.ServingRouter` on a virtual clock,
+twice — once unfaulted, once under a seeded
+:class:`repro.serving.faults.FaultPlan` replay that kills a host mid-run
+(plus scripted drops/delays). Gates: zero requests lost or shed, at least
+one host death with at least one retry actually exercised, and every
+recovered request's tokens bitwise-identical to both the unfaulted router
+run and the single-host server leg. Recovery time (steps from death to
+every victim re-placed) and the retry/spill/remesh counts land in the
+JSON artifact; ``--chaos-trace-out`` exports the faulted run's span log
+for ``verify_obs.py``'s failover lifecycle checks.
+
 Every run also replays the trace once with span tracing enabled
 (``ServerConfig(trace=True)``) and gates on the observability overhead
 bounds: tokens (and scan moments, when mixed) bitwise-identical to the
@@ -164,9 +176,99 @@ def _run_mixed(model, params, scfg, arrivals, prompts, max_new: int,
     return lm_outs, scans, wall, server.metrics.summary()
 
 
+def _run_router(model, params, scfg, rcfg, arrivals, prompts, max_new: int,
+                faults=None):
+    """Replay the trace through the multi-host router on a virtual clock
+    (1 virtual second per router step — heartbeat timeouts and backoffs
+    elapse deterministically, independent of host speed)."""
+    from repro.obs.trace import ManualClock
+    from repro.serving import ServingRouter
+
+    clock = ManualClock()
+    router = ServingRouter(model, params, scfg, rcfg, faults=faults,
+                           clock=clock)
+    rids: list[int] = []
+    pending = list(zip(arrivals, prompts))
+    t0 = time.perf_counter()
+    while pending or any(not r.done for r in router.records.values()):
+        while pending and pending[0][0] <= router.step_i:
+            rids.append(router.submit(pending.pop(0)[1],
+                                      max_new_tokens=max_new))
+        router.step()
+        clock.advance(1.0)
+        if router.step_i > 10_000:
+            raise RuntimeError("router replay did not converge")
+    wall = time.perf_counter() - t0
+    outs = [(np.asarray(router.result(r).generated, np.int64),
+             np.asarray(router.result(r).uncertainty)) for r in rids]
+    return outs, wall, router
+
+
+def _run_chaos(model, params, scfg, arrivals, prompts, max_new: int,
+               seed: int, server_outs, trace_out: str | None = None):
+    """The fault-tolerance leg: unfaulted 3-host router reference, then
+    the same trace under a seeded FaultPlan (host killed mid-run, plus
+    scripted drops/delays), traced for verify_obs. Returns the chaos
+    result block for the JSON artifact."""
+    from repro.obs import trace as obs_trace
+    from repro.serving import FaultPlan, RouterConfig
+
+    rcfg = RouterConfig(n_hosts=3, heartbeat_timeout_s=2.5, max_retries=4)
+    ref_outs, _, ref_router = _run_router(model, params, scfg, rcfg,
+                                          arrivals, prompts, max_new)
+    # scope the scripted faults to the steps the run actually occupies —
+    # the seeded kill lands in the middle half, while work is in flight
+    horizon = max(4, ref_router.step_i)
+    faults = FaultPlan.seeded(seed, n_hosts=rcfg.n_hosts, horizon=horizon)
+
+    tracer = obs_trace.TRACER
+    tracer.clear()
+    tracer.enable()
+    try:
+        outs, _, router = _run_router(model, params, scfg, rcfg, arrivals,
+                                      prompts, max_new, faults=faults)
+    finally:
+        tracer.disable()
+    trace_records = len(tracer.events())
+    if trace_out:
+        tracer.export_jsonl(trace_out)
+    s = router.summary()
+    return {
+        "n_hosts": rcfg.n_hosts,
+        "seed": seed,
+        "horizon": horizon,
+        "killed_hosts": sorted({e.host for e in faults.events
+                                if e.action == "kill"}),
+        "kill_steps": sorted(e.step for e in faults.events
+                             if e.action == "kill"),
+        "requests": s.requests,
+        "completed": s.completed,
+        "lost": s.lost,
+        "shed": s.shed,
+        "host_deaths": s.host_deaths,
+        "retries": s.retries,
+        "spills": s.spills,
+        "remeshes": s.remeshes,
+        "steps": s.steps,
+        "recovery_steps": list(s.recovery_steps),
+        # virtual clock: 1 s per router step, so worst-case recovery time
+        # is the worst recovery window in virtual seconds
+        "recovery_time_s": float(max(s.recovery_steps, default=0)),
+        "tokens_bitwise_vs_unfaulted": all(
+            np.array_equal(ft, rt) and np.array_equal(fu, ru)
+            for (ft, fu), (rt, ru) in zip(outs, ref_outs)),
+        "tokens_bitwise_vs_server": all(
+            np.array_equal(ft, st) for (ft, _), (st, _)
+            in zip(outs, server_outs)),
+        "trace_records": trace_records,
+        "summary": s,
+    }
+
+
 def run(smoke: bool = False, quiet: bool = False, seed: int = 0,
-        mixed: bool = False, trace_out: str | None = None,
-        metrics_out: str | None = None) -> dict:
+        mixed: bool = False, chaos: bool = False,
+        trace_out: str | None = None, metrics_out: str | None = None,
+        chaos_trace_out: str | None = None) -> dict:
     import dataclasses
 
     import jax
@@ -291,6 +393,17 @@ def run(smoke: bool = False, quiet: bool = False, seed: int = 0,
     trace_records = len(tracer.events())
     if trace_out:
         tracer.export_jsonl(trace_out)
+
+    # -- chaos leg: seeded fault replay through the multi-host router -------
+    # (after the trace export — this leg clears and re-fills the ring; its
+    # own log goes to chaos_trace_out. Runs before the metrics export so
+    # the router_* counters land in the exposition.)
+    chaos_res = None
+    if chaos:
+        chaos_res = _run_chaos(model, params, scfg, arrivals, prompts,
+                               max_new, seed, srv_outs,
+                               trace_out=chaos_trace_out)
+
     if metrics_out:
         pathlib.Path(metrics_out).write_text(obs_export.prometheus_text())
 
@@ -389,6 +502,21 @@ def run(smoke: bool = False, quiet: bool = False, seed: int = 0,
                   f"{mixed_res['moments_bitwise']}, lm tokens unchanged: "
                   f"{mixed_res['tokens_match']}")
             print(mixed_res["summary"].format())
+        if chaos_res is not None:
+            print(f"chaos: seeded plan (seed {chaos_res['seed']}) killed "
+                  f"host(s) {chaos_res['killed_hosts']} at step(s) "
+                  f"{chaos_res['kill_steps']} of {chaos_res['horizon']} -> "
+                  f"{chaos_res['host_deaths']} death(s), "
+                  f"{chaos_res['retries']} retries, "
+                  f"{chaos_res['spills']} spills, "
+                  f"{chaos_res['remeshes']} remesh(es); "
+                  f"lost {chaos_res['lost']}, shed {chaos_res['shed']}; "
+                  f"worst recovery {chaos_res['recovery_time_s']:.0f} "
+                  f"virtual s; tokens bitwise == unfaulted: "
+                  f"{chaos_res['tokens_bitwise_vs_unfaulted']}, == "
+                  f"single-host server: "
+                  f"{chaos_res['tokens_bitwise_vs_server']}")
+            print(chaos_res["summary"].format())
     return {
         "baseline_tok_s": base_tps,
         "server_tok_s": srv_tps,
@@ -405,6 +533,7 @@ def run(smoke: bool = False, quiet: bool = False, seed: int = 0,
         "summary": summary,
         "perop_summary": po_summary,
         "mixed": mixed_res,
+        "chaos": chaos_res,
         "quantized": quantized,
         "model_fidelity": model_fidelity,
         "trace_records": trace_records,
@@ -478,6 +607,14 @@ def write_bench_json(out: dict, path: pathlib.Path = BENCH_JSON) -> dict:
             "scan_moments_bitwise_vs_direct": mx["moments_bitwise"],
             "lm_tokens_unchanged": mx["tokens_match"],
         }
+    if out.get("chaos") is not None:
+        ch = out["chaos"]
+        payload["chaos"] = {k: ch[k] for k in (
+            "n_hosts", "seed", "horizon", "killed_hosts", "kill_steps",
+            "requests", "completed", "lost", "shed", "host_deaths",
+            "retries", "spills", "remeshes", "steps", "recovery_steps",
+            "recovery_time_s", "tokens_bitwise_vs_unfaulted",
+            "tokens_bitwise_vs_server")}
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     return payload
 
@@ -498,6 +635,11 @@ def main() -> int:
                     help="add the mixed-modality leg: IVIM scans as "
                          "voxel-chunk work items in the same pool; gates on "
                          "bitwise scan moments and unchanged LM tokens")
+    ap.add_argument("--chaos", action="store_true",
+                    help="add the fault-tolerance leg: seeded FaultPlan "
+                         "replay through the 3-host router; gates on zero "
+                         "lost/shed requests and bitwise-identical "
+                         "recovered tokens")
     ap.add_argument("--seed", type=int, default=0,
                     help="trace seed (arrivals, prompts, scan volumes); "
                          "recorded in the JSON provenance")
@@ -507,9 +649,15 @@ def main() -> int:
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write the telemetry registry as Prometheus text "
                          "exposition after the run")
+    ap.add_argument("--chaos-trace-out", default=None, metavar="PATH",
+                    help="write the faulted chaos run's span/event log as "
+                         "JSONL (verify_obs.py checks the host-death -> "
+                         "retry -> re-admit lifecycle)")
     args = ap.parse_args()
     res = run(smoke=args.smoke, seed=args.seed, mixed=args.mixed,
-              trace_out=args.trace_out, metrics_out=args.metrics_out)
+              chaos=args.chaos, trace_out=args.trace_out,
+              metrics_out=args.metrics_out,
+              chaos_trace_out=args.chaos_trace_out)
     if not res["trace_tokens_match"]:
         print("ERROR: tokens/moments changed when span tracing was "
               "enabled (tracing must be bitwise-invisible)")
@@ -551,6 +699,23 @@ def main() -> int:
                 q["modeled_bytes_per_token_kv_f32"]:
             print("ERROR: bf16 KV cache models no decode HBM-byte "
                   "reduction over the f32 cache")
+            return 1
+    if args.chaos:
+        ch = res["chaos"]
+        if ch["lost"] or ch["shed"]:
+            print(f"ERROR: chaos run lost {ch['lost']} and shed "
+                  f"{ch['shed']} request(s) — fault tolerance must not "
+                  f"drop work")
+            return 1
+        if ch["host_deaths"] < 1 or ch["retries"] < 1:
+            print(f"ERROR: chaos scenario exercised {ch['host_deaths']} "
+                  f"host death(s) and {ch['retries']} retries — the "
+                  f"seeded plan must actually kill a host holding work")
+            return 1
+        if not ch["tokens_bitwise_vs_unfaulted"] or \
+                not ch["tokens_bitwise_vs_server"]:
+            print("ERROR: recovered tokens diverged from the unfaulted "
+                  "reference (failover must be bitwise-invisible)")
             return 1
     if args.mixed:
         if not res["mixed"]["moments_bitwise"]:

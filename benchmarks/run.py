@@ -100,7 +100,7 @@ def main() -> None:
     print("=" * 72)
     print("bench_serving — continuous batching vs looped one-shot serving")
     print("=" * 72)
-    srv = bench_serving.run(smoke=args.smoke, mixed=True)
+    srv = bench_serving.run(smoke=args.smoke, mixed=True, chaos=True)
     csv.append(("serving_continuous_batching_speedup", srv["speedup"],
                 "server tok/s over looped serve_uncertain, Poisson trace"))
     csv.append(("serving_fused_decode_speedup", srv["fused_vs_per_op"],
@@ -120,6 +120,18 @@ def main() -> None:
                     srv["mixed"]["voxels_per_s"],
                     "IVIM voxel-chunk throughput interleaved with the LM "
                     "trace in one pool"))
+    if srv["chaos"] is not None:
+        csv.append(("serving_chaos_requests_lost",
+                    float(srv["chaos"]["lost"] + srv["chaos"]["shed"]),
+                    "requests lost or shed when a seeded FaultPlan kills "
+                    "1 of 3 router hosts mid-run (gate: 0)"))
+        csv.append(("serving_chaos_recovery_time_s",
+                    srv["chaos"]["recovery_time_s"],
+                    "worst host-death -> all victims re-placed window, "
+                    "virtual seconds"))
+        csv.append(("serving_chaos_retries",
+                    float(srv["chaos"]["retries"]),
+                    "failover resubmissions exercised by the seeded plan"))
     # canonical serving perf-trajectory artifact (fused vs per-op decode,
     # with backend + shape provenance). Smoke runs must not clobber the
     # committed full-size numbers.

@@ -16,6 +16,13 @@ promises (ci.sh runs this as the obs smoke leg):
   (``token``|``chunk``|``escalate``)* -> (``preempt`` -> ``admit`` ...)* ->
   ``finish`` — no token before admission, nothing after finish, and every
   enqueued request finishes;
+* router failover lifecycles are consistent: a ``retry`` event may only
+  appear inside an open ``host_death`` or ``straggler_drain`` span (work
+  is never resubmitted without a recorded cause), ``cancel`` withdraws
+  only queued work, a retried request re-enters through a fresh
+  ``enqueue`` (the re-admit leg of the host-death -> retry -> re-admit
+  lifecycle), and ``shed`` is terminal — every request ends finished or
+  shed;
 * the ``--metrics`` exposition parses (``obs.export.parse_exposition``)
   and contains the serving counters.
 
@@ -38,6 +45,7 @@ def verify_trace_events(events: list[dict]) -> list[str]:
     errors: list[str] = []
     last_t = None
     span_stack: list[int] = []
+    span_names: list[str] = []     # open-span names (failover context)
     state: dict[object, str] = {}
 
     def err(i: int, msg: str) -> None:
@@ -54,6 +62,7 @@ def verify_trace_events(events: list[dict]) -> list[str]:
             last_t = t
         if kind == "begin":
             span_stack.append(ev.get("span"))
+            span_names.append(name)
             if ev.get("parent") != (span_stack[-2] if len(span_stack) > 1
                                     else None):
                 err(i, f"span {ev.get('span')} parent "
@@ -65,18 +74,21 @@ def verify_trace_events(events: list[dict]) -> list[str]:
                 err(i, f"end of span {ev.get('span')} but innermost open "
                        f"span is {span_stack[-1]}")
                 span_stack.pop()
+                span_names.pop()
             else:
                 span_stack.pop()
+                span_names.pop()
 
         attrs = ev.get("attrs", {})
         rid = attrs.get("req_id")
         if rid is None:
             continue
         cur = state.get(rid)
-        if cur == "finished":
-            err(i, f"request {rid}: {name!r} after finish")
+        if cur in ("finished", "shed"):
+            err(i, f"request {rid}: {name!r} after {cur}")
         elif name == "enqueue":
-            if cur is not None:
+            # a fresh admission, or the re-admit leg of router failover
+            if cur is not None and cur != "retrying":
                 err(i, f"request {rid}: duplicate enqueue (state {cur})")
             state[rid] = "queued"
         elif name == "admit" and kind == "begin":
@@ -91,6 +103,23 @@ def verify_trace_events(events: list[dict]) -> list[str]:
             if cur != "running":
                 err(i, f"request {rid}: preempt from state {cur}")
             state[rid] = "queued"
+        elif name == "cancel":
+            # the router's drain hook withdraws QUEUED work only
+            if cur != "queued":
+                err(i, f"request {rid}: cancel from state {cur}")
+            state[rid] = "retrying"
+        elif name == "retry":
+            # failover resubmission must carry its cause: the router only
+            # emits it inside a host_death / straggler_drain span
+            if not any(n in ("host_death", "straggler_drain")
+                       for n in span_names):
+                err(i, f"request {rid}: retry outside a host_death/"
+                       f"straggler_drain span (open: {span_names})")
+            if cur not in ("queued", "running", "retrying"):
+                err(i, f"request {rid}: retry from state {cur}")
+            state[rid] = "retrying"
+        elif name == "shed":
+            state[rid] = "shed"    # graceful degradation: terminal
         elif name == "finish":
             if cur != "running":
                 err(i, f"request {rid}: finish from state {cur}")
@@ -99,7 +128,7 @@ def verify_trace_events(events: list[dict]) -> list[str]:
         errors.append(f"{len(span_stack)} span(s) never ended: "
                       f"{span_stack}")
     for rid, cur in sorted(state.items(), key=str):
-        if cur != "finished":
+        if cur not in ("finished", "shed"):
             errors.append(f"request {rid}: trace ends in state {cur!r}, "
                           f"not finished")
     return errors

@@ -88,3 +88,16 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_serving --s
     --trace-out "$obs_dir/trace.jsonl" --metrics-out "$obs_dir/metrics.prom"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.verify_obs \
     --trace "$obs_dir/trace.jsonl" --metrics "$obs_dir/metrics.prom"
+
+# Chaos smoke: the same trace through the 3-host fault-tolerant router,
+# unfaulted and under a seeded FaultPlan that kills a host mid-run. The
+# bench exits nonzero if any request is lost or shed, if the scenario
+# failed to exercise a host death with retries, or if the recovered tokens
+# are not bitwise-identical to the unfaulted run; the verifier then checks
+# the faulted run's span log (host-death -> retry -> re-admit lifecycle,
+# retry events only inside host_death/straggler_drain spans).
+REPRO_KERNEL_BACKEND=pallas-interpret \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_serving --smoke --chaos \
+    --chaos-trace-out "$obs_dir/chaos.jsonl"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.verify_obs \
+    --trace "$obs_dir/chaos.jsonl"

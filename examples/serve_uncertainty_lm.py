@@ -25,6 +25,17 @@ queue, backpressure and escalation policy. The example prints per-modality
 latency and uncertainty summaries — the paper's MRI workload and its LM
 analogue served by one scheduler.
 
+``--hosts N`` (with ``--server``) fronts N per-host pools with the
+fault-tolerant multi-host router (``repro.serving.router``): sticky
+round-robin request homes, cross-host spill on backpressure, heartbeat
+health checks on a virtual clock, and bounded retry/backoff failover.
+``--chaos`` scripts a host kill mid-run through the deterministic
+fault-injection harness (``repro.serving.faults``) — the example then
+shows the death being detected, the resident work resubmitted, the pool
+remeshed (``distributed.elastic.plan_remesh``), and the recovered tokens
+coming back identical anyway (pool rows are batch-independent, so
+failover is bitwise-invisible).
+
 ``--trace-out`` (with ``--server``) switches on the observability layer
 (``repro.obs``): every enqueue / admit / prefill / decode / token /
 escalation / finish lands in a JSONL span log that
@@ -68,6 +79,13 @@ def main() -> None:
                     help="request count in --server mode")
     ap.add_argument("--slots", type=int, default=2,
                     help="KV slot-pool size in --server mode")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="front N per-host pools with the fault-tolerant "
+                         "router (--server mode; 1 = single server)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="script a host kill mid-run (--hosts > 1): the "
+                         "router detects the death by heartbeat, resubmits "
+                         "the work, remeshes — results are unchanged")
     ap.add_argument("--scan", action="store_true",
                     help="also submit a synthetic IVIM scan volume into the "
                          "same pool (--server mode): voxel chunks and LM "
@@ -81,6 +99,11 @@ def main() -> None:
     args = ap.parse_args()
     if args.scan and not args.server:
         raise SystemExit("--scan needs --server (the scan rides the pool)")
+    if args.hosts > 1 and not args.server:
+        raise SystemExit("--hosts needs --server (the router fronts pools)")
+    if args.chaos and args.hosts < 2:
+        raise SystemExit("--chaos needs --hosts >= 2 (a surviving host "
+                         "must pick up the dead host's work)")
     if (args.trace_out or args.metrics_out) and not args.server:
         raise SystemExit("--trace-out/--metrics-out need --server (the "
                          "one-shot engine has no request lifecycle)")
@@ -95,11 +118,33 @@ def main() -> None:
     if args.server:
         prompts = jax.random.randint(jax.random.PRNGKey(1),
                                      (args.requests, 8), 0, cfg.vocab_size)
-        server = BayesianLMServer(model, params, ServerConfig(
+        scfg = ServerConfig(
             max_slots=args.slots, max_prompt_len=8,
             max_new_tokens=args.tokens,
             uncertainty_threshold=args.threshold,
-            trace=bool(args.trace_out)))
+            trace=bool(args.trace_out))
+        use_router = args.hosts > 1
+        clock = None
+        if use_router:
+            from repro.obs.trace import ManualClock
+            from repro.serving import (FaultEvent, FaultPlan, RouterConfig,
+                                       ServingRouter)
+            faults = FaultPlan()
+            if args.chaos:
+                faults = FaultPlan(events=(
+                    FaultEvent(step=2, host=0, action="kill"),))
+                print(f"chaos: host 0 goes silent at router step 2 "
+                      f"({args.hosts - 1} host(s) survive)")
+            clock = ManualClock()
+            server = ServingRouter(
+                model, params, scfg,
+                RouterConfig(n_hosts=args.hosts, heartbeat_timeout_s=2.5,
+                             max_retries=3),
+                faults=faults, clock=clock)
+            print(f"router: {args.hosts} hosts x {args.slots} slots, "
+                  f"heartbeat timeout 2.5 virtual s")
+        else:
+            server = BayesianLMServer(model, params, scfg)
         rids = [server.submit(p) for p in prompts]
         sid = None
         if args.scan:
@@ -114,34 +159,43 @@ def main() -> None:
                                      chunk=64)
             print(f"scan: {shape} IVIM volume ({vol[..., 0].size} voxels, "
                   f"{icfg.width} b-values) as one voxel-chunk work item")
-        summary = server.run()
+        if use_router:
+            summary = server.run(max_steps=10_000,
+                                 tick=lambda: clock.advance(1.0))
+        else:
+            summary = server.run()
+
+        def _state(rid):
+            return server.result(rid).final if use_router \
+                else server.result(rid)
+
         total_flagged = 0
         for i, rid in enumerate(rids):
-            st = server.result(rid)
+            st = _state(rid)
             _print_request(i, st.generated, st.uncertainty, st.flags,
                            args.threshold)
             total_flagged += sum(st.flags)
         print(f"\nflagged {total_flagged}/"
-              f"{sum(len(server.result(r).generated) for r in rids)} tokens"
+              f"{sum(len(_state(r).generated) for r in rids)} tokens"
               f" for review")
         if sid is not None:
-            st = server.result(sid)
+            st = _state(sid)
             mean, std = st.scan_moments()
             rel = np.asarray(std) / np.maximum(np.abs(np.asarray(mean)),
                                                1e-12)
-            tl = server.metrics.timelines
-            print(f"\n-- scan (req {sid}, modality "
-                  f"{tl[sid].modality}) --")
+            print(f"\n-- scan (req {sid}) --")
             print(f"chunks    {len(st.chunk_results)} "
                   f"({sum(st.flags)} flagged above {args.threshold}, "
                   f"{st.preempts} preemptions)")
-            print(f"latency   {tl[sid].latency * 1e3:.1f} ms "
-                  f"(queue wait {tl[sid].queue_wait * 1e3:.1f} ms)")
+            if not use_router:      # per-request timelines are per-host
+                tl = server.metrics.timelines
+                print(f"latency   {tl[sid].latency * 1e3:.1f} ms "
+                      f"(queue wait {tl[sid].queue_wait * 1e3:.1f} ms)")
+                lm_lat = [tl[r].latency for r in rids]
+                print(f"lm latency alongside   p50 "
+                      f"{np.percentile(lm_lat, 50) * 1e3:.1f} ms")
             print(f"voxel rel-unc   mean {rel.mean():.3f}   "
                   f"max {rel.max():.3f}")
-            lm_lat = [tl[r].latency for r in rids]
-            print(f"lm latency alongside   p50 "
-                  f"{np.percentile(lm_lat, 50) * 1e3:.1f} ms")
         print(f"\n-- serving metrics ({args.slots} slots x "
               f"{args.n_masks} mask rows each) --")
         print(summary.format())

@@ -56,7 +56,12 @@ def plan_remesh(old_shape: dict[str, int], n_alive: int) -> RemeshPlan:
             cand = (size, m == model, p, (m, p, data))
             if best is None or cand > best:
                 best = cand
-    assert best is not None
+    if best is None:
+        raise ValueError(
+            f"no valid mesh fits n_alive={n_alive} surviving chip(s) for "
+            f"old shape {old_shape}: every candidate assignment needs at "
+            f"least one chip per axis — the pool has nothing left to "
+            f"remesh onto")
     m, p, data = best[3]
     new_shape = {k: v for k, v in old_shape.items()}
     if "pod" in new_shape:
@@ -98,7 +103,25 @@ def _divisor_chain(n: int):
 def grad_accum_for_batch(global_batch: int, old_dp: int, new_dp: int,
                          old_accum: int = 1) -> int:
     """Keep the optimizer-visible global batch constant across a remesh by
-    scaling gradient-accumulation steps with the DP shrink factor."""
+    scaling gradient-accumulation steps with the DP shrink factor.
+
+    One optimizer step consumes ``total_micro = old_dp * old_accum``
+    micro-batches of ``global_batch / total_micro`` examples each, so
+    ``global_batch`` must divide evenly by ``total_micro`` — the
+    consistency check below rejects a ``global_batch`` the pre-remesh
+    schedule could not have produced from integer micro-batches. The
+    returned accumulation count is the ceiling division, pinning the
+    invariant ``new_dp * new_accum >= total_micro`` (the global batch
+    never shrinks across the remesh; when ``new_dp`` does not divide
+    ``total_micro`` the final accumulation step runs partially empty)."""
+    if min(global_batch, old_dp, new_dp, old_accum) < 1:
+        raise ValueError(
+            f"global_batch={global_batch}, old_dp={old_dp}, "
+            f"new_dp={new_dp}, old_accum={old_accum} must all be >= 1")
     total_micro = old_dp * old_accum
-    accum = max(1, -(-total_micro // new_dp))
-    return accum
+    if global_batch % total_micro:
+        raise ValueError(
+            f"global_batch {global_batch} is not divisible by old_dp * "
+            f"old_accum = {total_micro}: the pre-remesh schedule could "
+            f"not have produced it from integer micro-batches")
+    return max(1, -(-total_micro // new_dp))

@@ -32,24 +32,49 @@ class StepReport:
 
 @dataclasses.dataclass
 class StragglerMonitor:
-    """Sliding-window robust outlier detection on step times."""
+    """Sliding-window robust outlier detection on step times.
+
+    ``min_samples`` is the explicit warm-up threshold: a report is judged
+    only once at least ``min_samples`` *prior* samples exist, so the first
+    ``min_samples`` reports are always "ok" and the first judged sample is
+    compared against a median of exactly ``min_samples`` earlier steps.
+    (This replaces an implicit ``len > 5``-after-append guard that reached
+    the same first judged step but was neither documented nor tunable.)
+
+    ``should_escalate`` is edge-triggered, not latching: when ``patience``
+    consecutive straggler reports accumulate, a pending-escalation flag is
+    set and the consecutive counter resets; the next ``report()`` clears
+    the flag. The decision is therefore visible exactly between the
+    triggering report and the following one, and re-escalation requires a
+    fresh run of ``patience`` stragglers — a monitor that escalated once
+    does not demand a remesh forever after.
+    """
     window: int = 50
     slow_factor: float = 1.5        # > median * f -> "slow"
     straggler_factor: float = 3.0   # > median * f -> "straggler"
     patience: int = 3               # consecutive stragglers before escalation
+    min_samples: int = 5            # prior samples required before judging
 
     def __post_init__(self):
+        if self.min_samples < 1:
+            raise ValueError(f"min_samples {self.min_samples} < 1")
         self._times: deque[float] = deque(maxlen=self.window)
         self._consecutive = 0
+        self._pending = False
 
     def report(self, step: int, duration_s: float) -> StepReport:
+        self._pending = False
         med = (statistics.median(self._times) if self._times
                else duration_s)
+        warm = len(self._times) >= self.min_samples
         self._times.append(duration_s)
-        if duration_s > med * self.straggler_factor and len(self._times) > 5:
+        if warm and duration_s > med * self.straggler_factor:
             self._consecutive += 1
             sev = "straggler"
-        elif duration_s > med * self.slow_factor and len(self._times) > 5:
+            if self._consecutive >= self.patience:
+                self._pending = True
+                self._consecutive = 0
+        elif warm and duration_s > med * self.slow_factor:
             self._consecutive = 0
             sev = "slow"
         else:
@@ -60,5 +85,6 @@ class StragglerMonitor:
 
     @property
     def should_escalate(self) -> bool:
-        """True when persistent straggling warrants a remesh (policy step 3)."""
-        return self._consecutive >= self.patience
+        """True when persistent straggling warrants a remesh (policy step 3);
+        cleared by the next ``report()`` — see the class docstring."""
+        return self._pending

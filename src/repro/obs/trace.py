@@ -34,10 +34,34 @@ import time
 from typing import Callable
 
 __all__ = ["Tracer", "TRACER", "get_tracer", "span", "event",
-           "default_clock"]
+           "default_clock", "ManualClock"]
 
 #: The sanctioned serving clock (monotonic; immune to wall-clock steps).
 default_clock: Callable[[], float] = time.monotonic
+
+
+class ManualClock:
+    """Deterministic, manually-advanced monotonic clock — a drop-in for
+    :data:`default_clock` wherever a clock is injectable (the tracer,
+    serving metrics, the multi-host router's heartbeats). Reading it never
+    moves it; ``advance()`` moves virtual time forward. Tests and the
+    chaos bench drive one of these a fixed amount per router step, so
+    heartbeat timeouts and straggler timings replay identically regardless
+    of host speed."""
+
+    def __init__(self, start: float = 0.0) -> None:
+        self._t = float(start)
+
+    def __call__(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> float:
+        """Move virtual time forward ``dt`` seconds (monotonic — negative
+        steps are rejected); returns the new time."""
+        if dt < 0:
+            raise ValueError(f"ManualClock cannot go backwards (dt={dt})")
+        self._t += float(dt)
+        return self._t
 
 
 def _json_default(o):

@@ -1,8 +1,11 @@
 from repro.serving.engine import (  # noqa: F401
     ServeConfig, generate, plan_chunk_runner, predict_packed, predict_volume,
     serve_uncertain, uncertainty_decode_step)
+from repro.serving.faults import FaultEvent, FaultPlan  # noqa: F401
 from repro.serving.metrics import (  # noqa: F401
     MetricsCollector, RequestTimeline, ServingSummary)
+from repro.serving.router import (  # noqa: F401
+    RouterConfig, RouterSummary, ServingRouter, WorkRecord)
 from repro.serving.server import (  # noqa: F401
     BayesianLMServer, QueueFullError, Request, RequestState, ServerConfig,
     StepFns, VoxelScanRequest, WorkItem, step_fns)

@@ -561,15 +561,30 @@ class BayesianLMServer:
         self._queue: list[tuple[int, int, int]] = []   # (prio, seq, req_id)
         self._seq = itertools.count()
         self._ids = itertools.count()
+        self._cancelled: set[int] = set()   # heap tombstones (cancel())
         self.states: dict[int, RequestState] = {}
         self.metrics = MetricsCollector(cfg.max_slots, clock)
 
     # ---- admission ---------------------------------------------------------
+    def _claim_id(self, req_id: int | None) -> int:
+        """Next id from the server counter, or the caller-pinned one (the
+        multi-host router keeps ONE global id space across per-host
+        servers by pinning, so a failover resubmission keeps its id)."""
+        if req_id is None:
+            return next(self._ids)
+        rid = int(req_id)
+        if rid in self.states:
+            raise ValueError(f"req_id {rid} is already tracked by this "
+                             f"server ({self.states[rid].status})")
+        return rid
+
     def submit(self, tokens, *, max_new_tokens: int | None = None,
-               priority: int = 0) -> int:
+               priority: int = 0, req_id: int | None = None) -> int:
         """Enqueue ONE prompt (a 1-D token sequence — submit a batch as
         separate requests); returns the request id. Raises QueueFullError
-        when the admission queue is at max_queue (backpressure)."""
+        when the admission queue is at max_queue (backpressure).
+        ``req_id`` pins the id instead of drawing from the server counter
+        (router failover resubmits under the original global id)."""
         arr = np.asarray(tokens)
         if arr.ndim > 1:
             raise ValueError(f"submit takes one prompt, got shape "
@@ -578,7 +593,7 @@ class BayesianLMServer:
         if not 1 <= len(toks) <= self.cfg.max_prompt_len:
             raise ValueError(f"prompt length {len(toks)} outside "
                              f"[1, {self.cfg.max_prompt_len}]")
-        if len(self._queue) >= self.cfg.max_queue:
+        if self.queue_depth >= self.cfg.max_queue:
             _REJECTS.inc(modality="lm")
             self._tracer.event("reject", kind="lm")
             raise QueueFullError(
@@ -588,7 +603,7 @@ class BayesianLMServer:
         if not 1 <= mnt <= self.cfg.max_new_tokens:
             raise ValueError(f"max_new_tokens {mnt} outside "
                              f"[1, {self.cfg.max_new_tokens}]")
-        rid = next(self._ids)
+        rid = self._claim_id(req_id)
         st = RequestState(Request(rid, toks, mnt, priority),
                           effective_priority=priority)
         self.states[rid] = st
@@ -596,12 +611,13 @@ class BayesianLMServer:
         self.metrics.on_enqueue(rid)
         self._tracer.event("enqueue", req_id=rid, kind="lm",
                            prompt_len=len(toks), priority=priority,
-                           queue_depth=len(self._queue))
+                           queue_depth=self.queue_depth)
         return rid
 
     def submit_scan(self, plan, x, *, chunk: int = 4096, priority: int = 0,
                     backend: str | None = None,
-                    fused: bool | None = None) -> int:
+                    fused: bool | None = None, req_id: int | None = None,
+                    resume_results: list | None = None) -> int:
         """Enqueue ONE clinical scan (a compiled ``core.plan.PackedPlan``
         plus its flattened ``[n_voxels, D]`` voxel batch) as a voxel-chunk
         work item; returns the request id.
@@ -613,36 +629,67 @@ class BayesianLMServer:
         path runs, so a completed scan's ``scan_moments()`` is
         bitwise-identical to the direct path. Admission requires the plan's
         sample axis to map onto the pool layout
-        (``plan.slot_schedule == pool schedule``, i.e. matching n_masks)."""
+        (``plan.slot_schedule == pool schedule``, i.e. matching n_masks).
+
+        ``req_id`` pins the id (see :meth:`submit`); ``resume_results``
+        seeds the chunk cursor with moments already computed elsewhere —
+        router failover resubmits a scan from a dead host this way, and it
+        resumes at ``len(chunk_results)`` exactly like ``_preempt``
+        re-admission does on a single host (chunks never recompute and
+        never complete out of order)."""
         # lazy import: engine imports this module at its top level
         from repro.serving import engine as engine_lib
         self.schedule.admits(plan.slot_schedule(self.cfg.max_slots))
         x = jnp.asarray(x)
         if x.ndim != 2:
             raise ValueError(f"scan must be [n_voxels, D], got {x.shape}")
-        if len(self._queue) >= self.cfg.max_queue:
+        if self.queue_depth >= self.cfg.max_queue:
             _REJECTS.inc(modality="voxel")
             self._tracer.event("reject", kind="voxel")
             raise QueueFullError(
                 f"admission queue full ({self.cfg.max_queue})")
         bounds = scheduler_lib.chunk_bounds(x.shape[0], chunk)
+        if resume_results is not None and \
+                len(resume_results) >= len(bounds):
+            raise ValueError(
+                f"resume_results carries {len(resume_results)} chunks but "
+                f"the scan only has {len(bounds)}: nothing left to run")
         runner = engine_lib.plan_chunk_runner(plan, backend=backend,
                                               fused=fused)
-        rid = next(self._ids)
+        rid = self._claim_id(req_id)
         st = RequestState(VoxelScanRequest(rid, x, chunk, bounds, runner,
                                            priority),
                           effective_priority=priority)
+        if resume_results:
+            st.chunk_results = list(resume_results)
         self.states[rid] = st
         heapq.heappush(self._queue, (priority, next(self._seq), rid))
         self.metrics.on_enqueue(rid, modality="voxel")
         self._tracer.event("enqueue", req_id=rid, kind="voxel",
                            n_voxels=int(x.shape[0]), priority=priority,
-                           queue_depth=len(self._queue))
+                           resumed_chunks=len(resume_results or ()),
+                           queue_depth=self.queue_depth)
         return rid
+
+    def cancel(self, req_id: int) -> None:
+        """Withdraw a QUEUED work item (the router's drain/rebalance hook):
+        its state is evicted and its heap entry becomes a tombstone the
+        admission loop skips. Running or finished items cannot be cancelled
+        — preemption is the policy surface for resident work."""
+        st = self.states.get(req_id)
+        if st is None or st.status != "queued":
+            raise ValueError(
+                f"request {req_id} is "
+                f"{'unknown' if st is None else st.status}, not queued")
+        kind = st.kind
+        del self.states[req_id]
+        self._cancelled.add(req_id)
+        self._tracer.event("cancel", req_id=req_id, kind=kind)
 
     @property
     def queue_depth(self) -> int:
-        return len(self._queue)
+        # cancelled entries linger in the heap as tombstones until popped
+        return len(self._queue) - len(self._cancelled)
 
     @property
     def occupied_slots(self) -> int:
@@ -733,6 +780,9 @@ class BayesianLMServer:
         once fully idle."""
         while self._queue and None in self._slots:
             _, _, rid = heapq.heappop(self._queue)
+            if rid in self._cancelled:        # tombstone left by cancel()
+                self._cancelled.discard(rid)
+                continue
             self._admit(rid, self._slots.index(None))
         occupied = [(slot, rid) for slot, rid in enumerate(self._slots)
                     if rid is not None]
@@ -742,11 +792,11 @@ class BayesianLMServer:
               if self.states[r].kind == "lm"]
         voxel = [(s, r) for s, r in occupied
                  if self.states[r].kind == "voxel"]
-        self.metrics.on_step(len(occupied), len(self._queue),
+        self.metrics.on_step(len(occupied), self.queue_depth,
                              voxel_occupied=len(voxel))
 
         with self._tracer.span("step", lm=len(lm), voxel=len(voxel),
-                               queue_depth=len(self._queue)), \
+                               queue_depth=self.queue_depth), \
                 obs_profile.annotate("serving.step"):
             if lm:
                 # Inactive slots decode at pos -1: their (garbage) K/V write

@@ -353,3 +353,72 @@ assert max(jax.tree.leaves(d)) < 5e-3, max(jax.tree.leaves(d))
 print("SHARDED_STEP_OK")
 """
     assert "SHARDED_STEP_OK" in run_subprocess(code)
+
+
+# ---------------------------------------------------------------------------
+# elastic + straggler: remesh/accum edge cases and monitor semantics
+# ---------------------------------------------------------------------------
+
+def test_remesh_no_survivors_raises_value_error():
+    """n_alive=0 has no valid candidate mesh: the planner must say so
+    descriptively, not trip a bare assert."""
+    with pytest.raises(ValueError, match="nothing left to remesh"):
+        elastic.plan_remesh({"pod": 2, "data": 4, "model": 2}, n_alive=0)
+
+
+def test_grad_accum_rejects_inconsistent_schedule():
+    """global_batch must be producible by the PRE-remesh schedule: old_dp *
+    old_accum integer micro-batches."""
+    with pytest.raises(ValueError, match="not divisible"):
+        elastic.grad_accum_for_batch(global_batch=100, old_dp=32,
+                                     new_dp=24, old_accum=1)
+    with pytest.raises(ValueError, match=">= 1"):
+        elastic.grad_accum_for_batch(global_batch=256, old_dp=32,
+                                     new_dp=0, old_accum=1)
+
+
+def test_grad_accum_invariant_grid():
+    """The documented invariant across a sweep of shrink factors: the
+    post-remesh schedule never consumes fewer micro-batches than the
+    pre-remesh one (the global batch never shrinks), and stays minimal
+    (ceiling division, never a full extra round)."""
+    for old_dp, old_accum in [(32, 1), (32, 4), (8, 2), (16, 3)]:
+        total_micro = old_dp * old_accum
+        for new_dp in [1, 2, 3, 5, 7, 8, 24, 31, 32]:
+            accum = elastic.grad_accum_for_batch(
+                global_batch=total_micro * 4, old_dp=old_dp,
+                new_dp=new_dp, old_accum=old_accum)
+            assert new_dp * accum >= total_micro, \
+                (old_dp, old_accum, new_dp, accum)
+            assert new_dp * (accum - 1) < total_micro, \
+                (old_dp, old_accum, new_dp, accum)
+
+
+def test_straggler_min_samples_warmup():
+    """No report is judged until min_samples PRIOR samples exist — the
+    first few steps (compile, cold caches) must not trip the detector."""
+    mon = straggler.StragglerMonitor(window=20, patience=1, min_samples=5)
+    # wildly varying warm-up: all "ok" because the window isn't warm yet
+    for i, dt in enumerate([5.0, 0.1, 9.0, 0.2, 3.0]):
+        assert mon.report(i, dt).severity == "ok"
+        assert not mon.should_escalate
+    with pytest.raises(ValueError):
+        straggler.StragglerMonitor(window=8, min_samples=0)
+
+
+def test_straggler_escalation_does_not_latch():
+    """should_escalate is edge-triggered: one escalation decision per
+    straggle burst, and a recovered host reports healthy again."""
+    mon = straggler.StragglerMonitor(window=20, patience=2, min_samples=5)
+    for i in range(8):
+        mon.report(i, 1.0)
+    assert mon.report(8, 5.0).severity == "straggler"
+    assert not mon.should_escalate            # patience=2: not yet
+    mon.report(9, 5.0)
+    assert mon.should_escalate                # second consecutive -> fire
+    # the NEXT report clears the pending escalation (edge, not level)
+    mon.report(10, 1.0)
+    assert not mon.should_escalate
+    # recovery resets the streak; a single later straggle doesn't re-fire
+    mon.report(11, 5.0)
+    assert not mon.should_escalate
