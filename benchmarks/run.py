@@ -10,6 +10,7 @@ are already CPU-sized).
 from __future__ import annotations
 
 import argparse
+import pathlib
 import sys
 import time
 
@@ -25,6 +26,20 @@ def main() -> None:
                             bench_schedule, bench_serving)
 
     csv: list[tuple[str, float, str]] = []
+
+    # Provenance: stamp the static-analysis state of the tree these numbers
+    # were measured on (checker version + finding count; ci.sh gates the
+    # count at 0, so a nonzero here marks the run as off-gate).
+    from repro.analysis import __version__ as analysis_version
+    from repro.analysis import checker as analysis_checker
+    pkg = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
+    findings = analysis_checker.analyze(pkg)
+    active = sum(1 for f in findings if not f.suppressed)
+    print(f"repro.analysis v{analysis_version}: {active} finding(s), "
+          f"{len(findings) - active} suppressed")
+    csv.append(("static_analysis_findings", float(active),
+                f"repro.analysis v{analysis_version} invariant findings "
+                "(gate: 0)"))
 
     print("=" * 72)
     print("bench_algorithm — paper Figs. 6-7 (RMSE / uncertainty vs SNR)")

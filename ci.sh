@@ -1,34 +1,22 @@
 #!/usr/bin/env bash
-# Tier-1 CI gate: catches JAX API drift and compat-layer violations at PR
-# time. Usage: ./ci.sh [--no-install]
+# Tier-1 CI gate: catches invariant violations (JAX API drift, serving
+# clock leaks, bare asserts, import-time device probing, kernel-trio /
+# fused-kind drift) at PR time. Usage: ./ci.sh [--no-install]
 set -euo pipefail
 cd "$(dirname "$0")"
 
+# Static-analysis gate FIRST: repro.analysis is stdlib-only, so it runs
+# before any pip work. AST-based successor to the old compat-drift /
+# serving-clock greps — it also sees aliased imports (`from time import
+# monotonic`, `import jax.experimental.shard_map as smap`) and structure
+# (bare asserts, import-time jax, kernel.py/ref.py/ops.py trios,
+# cache-key hazards, FusedStep-kind exhaustiveness). Rule catalog:
+# `python -m repro.analysis.cli --list-rules`; see README "Static
+# analysis".
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis.cli src/repro
+
 if [[ "${1:-}" != "--no-install" ]]; then
     python -m pip install -q -r requirements-dev.txt
-fi
-
-# Drifted JAX APIs may be spelled directly only in the portability layer —
-# everything else must go through repro.compat (see src/repro/compat.py).
-violations=$(grep -rnE \
-    'jax\.shard_map|jax\.set_mesh|jax\.sharding\.set_mesh|jax\.sharding\.use_mesh|jax\.sharding\.AxisType|jax\.experimental\.shard_map|from jax\.experimental import .*shard_map|from jax\.sharding import .*(set_mesh|use_mesh|AxisType)|jax\.tree_map\(|jax\.tree_leaves\(' \
-    src/repro --include='*.py' | grep -v 'src/repro/compat.py' || true)
-if [[ -n "$violations" ]]; then
-    echo "ERROR: drifted JAX APIs used outside repro/compat.py:" >&2
-    echo "$violations" >&2
-    exit 1
-fi
-
-# The serving hot path must take its wall clock from the one sanctioned
-# injectable source (repro.obs.trace.default_clock) — direct time.* calls
-# there bypass clock injection and break virtual-time trace replay.
-clock_violations=$(grep -rnE 'time\.(monotonic|perf_counter|time)\(' \
-    src/repro/serving --include='*.py' || true)
-if [[ -n "$clock_violations" ]]; then
-    echo "ERROR: direct time.* calls on the serving path (use" >&2
-    echo "repro.obs.trace.default_clock / the injectable clock):" >&2
-    echo "$clock_violations" >&2
-    exit 1
 fi
 
 # Tier-1 verify (ROADMAP.md): the whole suite, quiet, fail-fast off so the

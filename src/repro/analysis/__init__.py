@@ -1,0 +1,35 @@
+"""Stdlib-only static analysis enforcing the repo's hard-won invariants.
+
+Nine PRs of serving/kernel work accumulated a set of load-bearing rules —
+drifted-JAX spellings live in ``repro/compat.py`` only, the serving path
+takes wall time from the injectable clock, no device probing at import,
+kernel packages ship the kernel/ref/ops trio, library code raises loud
+``ValueError``\\ s instead of bare ``assert``\\ s — that used to be guarded by
+two fragile ``grep`` lines in ``ci.sh``.  This package mechanizes them as
+AST checks (aliased imports included), so the gate sees structure instead
+of spellings.
+
+Layout:
+
+* :mod:`repro.analysis.rules`   — rule catalog, :class:`Finding`,
+  suppression parsing (``# repro: ignore[rule-id]``).
+* :mod:`repro.analysis.checker` — per-file AST visitors + the
+  :func:`~repro.analysis.checker.analyze` entry point.
+* :mod:`repro.analysis.project` — cross-file repo-structure checks
+  (kernel trio, fused-kind exhaustiveness).
+* :mod:`repro.analysis.cli`     — ``python -m repro.analysis.cli src/repro``
+  (text or ``--json`` output, exit nonzero on findings).
+
+Intentionally imports nothing beyond the stdlib: ci.sh runs it as its
+first leg, before any pip work, and importing it must never initialize
+jax device state (the very contract it checks).
+"""
+
+from __future__ import annotations
+
+#: Checker version, recorded by ``benchmarks/run.py`` provenance and the
+#: CLI summary line. Bump on any rule addition or semantic change so bench
+#: artifacts can be compared across checker generations.
+__version__ = "1.0.0"
+
+__all__ = ["__version__"]

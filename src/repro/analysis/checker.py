@@ -1,0 +1,408 @@
+"""AST visitors for the per-file rules + the :func:`analyze` entry point.
+
+Name resolution is import-map based: every ``import``/``from`` binding in
+a module maps a local name to its dotted origin, and attribute chains are
+resolved through that map before matching.  This is what lets the checker
+catch the spellings the old ``ci.sh`` greps missed::
+
+    from time import monotonic          # -> time.monotonic
+    import jax.experimental.shard_map as smap
+    import time as t; t.perf_counter()  # -> time.perf_counter
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from pathlib import Path
+
+from repro.analysis import rules
+from repro.analysis.rules import Finding
+
+# ---------------------------------------------------------------------------
+# banned-name tables
+# ---------------------------------------------------------------------------
+
+#: Drifted JAX spellings that must only appear in repro/compat.py
+#: (ROADMAP "JAX portability": floor is 0.4.35; ``jax.tree.*`` /
+#: ``jax.tree_util.*`` are stable there and stay legal everywhere).
+DRIFTED_EXACT = frozenset({
+    "jax.shard_map", "jax.set_mesh", "jax.use_mesh",
+    "jax.sharding.set_mesh", "jax.sharding.use_mesh",
+    "jax.sharding.AxisType",
+    "jax.tree_map", "jax.tree_leaves", "jax.tree_flatten",
+    "jax.tree_unflatten", "jax.tree_structure", "jax.tree_transpose",
+    "jax.tree_all", "jax.tree_reduce",
+})
+DRIFTED_PREFIXES = ("jax.experimental.shard_map",)
+
+#: The serving path's one sanctioned wall clock is
+#: ``repro.obs.trace.default_clock`` (injectable). These bypass it.
+SERVING_CLOCKS = frozenset({"time.time", "time.monotonic",
+                            "time.perf_counter"})
+
+#: Calls that are illegal at module top level: they either trace/compile
+#: (jit, pallas_call) or initialize jax device state, breaking the
+#: probed-once-per-process-on-first-kernel-call contract.  The blessed
+#: module-level jit idiom — ``@functools.partial(jax.jit, ...)`` on a
+#: plain function — is untouched: there ``jax.jit`` is an *argument*, not
+#: a top-level callee, and applying it neither traces nor touches devices.
+IMPORT_TIME_BANNED = frozenset({
+    "jax.jit", "jax.pjit", "jax.devices", "jax.local_devices",
+    "jax.device_count", "jax.local_device_count", "jax.device_put",
+    "jax.default_backend", "jax.make_mesh",
+    "repro.compat.kernel_backend", "repro.compat.default_backend",
+    "repro.compat.make_mesh", "repro.compat.on_tpu",
+})
+
+_CACHE_DECORATORS = frozenset({"functools.lru_cache", "functools.cache"})
+
+#: Parameter names / annotation words that smell like unhashable-or-pinned
+#: cache keys (the PR 5 leak: an lru_cache keyed on a ``Model`` instance
+#: pinned its weights for the life of the process). Configs/specs (frozen,
+#: hashable, value-semantics) are the sanctioned key vocabulary.
+_HAZARD_PARAM_NAMES = frozenset({
+    "model", "models", "params", "weights", "state", "batch", "caches",
+    "array", "arrays", "arr", "tensor", "tensors",
+})
+_HAZARD_ANNOTATION = ("Array", "ndarray", "Model", "Params", "Tensor")
+
+
+def _is_drifted(dotted: str) -> bool:
+    return dotted in DRIFTED_EXACT or any(
+        dotted == p or dotted.startswith(p + ".")
+        for p in DRIFTED_PREFIXES)
+
+
+def _banned_at_import(dotted: str) -> bool:
+    return dotted in IMPORT_TIME_BANNED or dotted.endswith(".pallas_call")
+
+
+def _hazardous_annotation(ann: str) -> bool:
+    # word-boundary match: "ModelConfig" must NOT trip on "Model"
+    for word in _HAZARD_ANNOTATION:
+        i = ann.find(word)
+        while i != -1:
+            before = ann[i - 1] if i else ""
+            after = ann[i + len(word):i + len(word) + 1]
+            if not (before.isalnum() or before == "_") and \
+                    not (after.isalnum() or after == "_"):
+                return True
+            i = ann.find(word, i + 1)
+    return False
+
+
+# ---------------------------------------------------------------------------
+# import-map name resolution
+# ---------------------------------------------------------------------------
+
+def build_import_map(tree: ast.AST, package: str) -> dict[str, str]:
+    """Local name -> dotted origin, from every import in ``tree``.
+
+    ``package`` is the dotted package containing the module (e.g.
+    ``"repro.kernels.masked_ffn"`` for its ``ops.py``), used to resolve
+    relative imports.  The map is flat (function-local imports included) —
+    shadowing is rare enough in this tree that scope tracking would buy
+    nothing but complexity.
+    """
+    imports: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.asname:
+                    imports[alias.asname] = alias.name
+                else:
+                    top = alias.name.split(".")[0]
+                    imports[top] = top
+        elif isinstance(node, ast.ImportFrom):
+            module = node.module or ""
+            if node.level:
+                parts = package.split(".") if package else []
+                keep = parts[:len(parts) - (node.level - 1)] \
+                    if node.level > 1 else parts
+                module = ".".join(keep + ([module] if module else []))
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                full = f"{module}.{alias.name}" if module else alias.name
+                imports[alias.asname or alias.name] = full
+    return imports
+
+
+def resolve_dotted(node: ast.AST, imports: dict[str, str]) -> str | None:
+    """Resolve a pure Name/Attribute chain to its dotted origin, or None
+    if the chain bottoms out in anything else (a call, a subscript, a
+    local variable that was never imported)."""
+    attrs: list[str] = []
+    while isinstance(node, ast.Attribute):
+        attrs.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    base = imports.get(node.id)
+    if base is None:
+        return None
+    return ".".join([base, *reversed(attrs)]) if attrs else base
+
+
+# ---------------------------------------------------------------------------
+# the per-file visitor
+# ---------------------------------------------------------------------------
+
+class FileVisitor(ast.NodeVisitor):
+    """Runs compat-drift, serving-clock, bare-assert, import-time-jax and
+    cache-key-hazard over one module."""
+
+    def __init__(self, display: str, rel: str, imports: dict[str, str]):
+        self.display = display
+        self.imports = imports
+        self.findings: list[Finding] = []
+        self._depth = 0  # function-body nesting (0 == runs at import)
+        self._in_serving = rel.startswith("serving/")
+        self._check_drift = rel != "compat.py"
+
+    # -- helpers ----------------------------------------------------------
+
+    def _add(self, rule: str, node: ast.AST, message: str) -> None:
+        self.findings.append(Finding(
+            rule, self.display, getattr(node, "lineno", 1),
+            getattr(node, "col_offset", 0) + 1, message))
+
+    def _resolve(self, node: ast.AST) -> str | None:
+        return resolve_dotted(node, self.imports)
+
+    def _check_name_use(self, node: ast.AST, dotted: str) -> bool:
+        hit = False
+        if self._check_drift and _is_drifted(dotted):
+            self._add("compat-drift", node,
+                      f"drifted JAX API `{dotted}` outside repro/compat.py"
+                      " — add/extend the shim in repro.compat instead")
+            hit = True
+        if self._in_serving and dotted in SERVING_CLOCKS:
+            self._add("serving-clock", node,
+                      f"`{dotted}` on the serving path — take time from "
+                      "the injectable repro.obs.trace.default_clock")
+            hit = True
+        return hit
+
+    # -- imports ----------------------------------------------------------
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            if self._check_drift and _is_drifted(alias.name):
+                self._add("compat-drift", node,
+                          f"drifted JAX module import `{alias.name}` "
+                          "outside repro/compat.py")
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        module = node.module or ""
+        for alias in node.names:
+            if alias.name == "*":
+                continue
+            full = f"{module}.{alias.name}" if module else alias.name
+            if self._check_drift and not node.level and \
+                    (_is_drifted(module) or _is_drifted(full)):
+                self._add("compat-drift", node,
+                          f"drifted JAX from-import `{full}` outside "
+                          "repro/compat.py")
+            if self._in_serving and full in SERVING_CLOCKS:
+                self._add("serving-clock", node,
+                          f"from-import of `{full}` on the serving path — "
+                          "take time from the injectable "
+                          "repro.obs.trace.default_clock")
+
+    # -- usages -----------------------------------------------------------
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        dotted = self._resolve(node)
+        if dotted is not None:
+            self._check_name_use(node, dotted)
+            return  # pure chain: nothing below can resolve differently
+        self.generic_visit(node)
+
+    def visit_Name(self, node: ast.Name) -> None:
+        dotted = self.imports.get(node.id)
+        if dotted is not None:
+            self._check_name_use(node, dotted)
+
+    # -- statements -------------------------------------------------------
+
+    def visit_Assert(self, node: ast.Assert) -> None:
+        self._add("bare-assert", node,
+                  "assert statement in library code (stripped under "
+                  "`python -O`) — raise ValueError with the diagnostic "
+                  "payload instead")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if self._depth == 0:
+            dotted = self._resolve(node.func)
+            if dotted is not None and _banned_at_import(dotted):
+                self._add("import-time-jax", node,
+                          f"`{dotted}(...)` at module top level — jit / "
+                          "pallas / device probing must stay lazy (first "
+                          "kernel call), never run at import")
+        self.generic_visit(node)
+
+    # -- function scopes --------------------------------------------------
+
+    def _visit_function(self, node) -> None:
+        for dec in node.decorator_list:
+            if self._depth == 0 and not isinstance(dec, ast.Call):
+                dotted = self._resolve(dec)
+                if dotted is not None and _banned_at_import(dotted):
+                    self._add("import-time-jax", dec,
+                              f"bare `@{dotted}` decorator applies at "
+                              "import — wrap lazily (or use the "
+                              "functools.partial idiom on a call that "
+                              "cannot touch devices)")
+            self.visit(dec)
+        self._check_cache_hazard(node)
+        # defaults/annotations evaluate at def time -> current depth
+        self.visit(node.args)
+        if node.returns is not None:
+            self.visit(node.returns)
+        self._depth += 1
+        for stmt in node.body:
+            self.visit(stmt)
+        self._depth -= 1
+
+    visit_FunctionDef = _visit_function
+    visit_AsyncFunctionDef = _visit_function
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        self.visit(node.args)
+        self._depth += 1
+        self.visit(node.body)
+        self._depth -= 1
+
+    def _check_cache_hazard(self, node) -> None:
+        cache_dec = None
+        for dec in node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            if self._resolve(target) in _CACHE_DECORATORS:
+                cache_dec = dec
+                break
+        if cache_dec is None:
+            return
+        args = node.args
+        for arg in [*args.posonlyargs, *args.args, *args.kwonlyargs]:
+            ann = ast.unparse(arg.annotation) if arg.annotation else ""
+            if arg.arg.lower() in _HAZARD_PARAM_NAMES or \
+                    _hazardous_annotation(ann):
+                why = f"parameter `{arg.arg}`" + \
+                    (f" (annotated `{ann}`)" if ann else "")
+                self._add("cache-key-hazard", cache_dec,
+                          f"functools cache on `{node.name}` keyed by "
+                          f"{why} — process-lifetime caches pin their "
+                          "keys; key on hashable configs/specs, never "
+                          "models or arrays")
+                return
+
+
+# ---------------------------------------------------------------------------
+# file + tree orchestration
+# ---------------------------------------------------------------------------
+
+def _package_of(rel: str) -> str:
+    """Dotted package containing the module at repro-relative ``rel``."""
+    parts = rel.split("/")[:-1]
+    return ".".join(["repro", *parts])
+
+
+def check_file(path: Path, rel: str, display: str) -> list[Finding]:
+    """All per-file findings for one module (suppressions not yet
+    applied). ``rel`` is the posix path relative to the ``repro`` package
+    root — it drives rule scoping (serving/, compat.py)."""
+    source = path.read_text(encoding="utf-8")
+    return check_source(source, rel, display)
+
+
+def check_source(source: str, rel: str, display: str) -> list[Finding]:
+    try:
+        tree = ast.parse(source, filename=display)
+    except SyntaxError as exc:
+        return [Finding("parse-error", display, exc.lineno or 1,
+                        exc.offset or 1,
+                        f"file does not parse: {exc.msg}")]
+    imports = build_import_map(tree, _package_of(rel))
+    visitor = FileVisitor(display, rel, imports)
+    visitor.visit(tree)
+    seen: set[tuple] = set()
+    out = []
+    for f in visitor.findings:
+        key = (f.rule, f.path, f.line, f.col)
+        if key not in seen:
+            seen.add(key)
+            out.append(f)
+    return out
+
+
+def locate_package_root(root: Path) -> Path:
+    """Resolve a CLI argument to the ``repro`` package directory: accepts
+    the package dir itself, a directory containing ``repro/``, or a repo
+    root containing ``src/repro``."""
+    for cand in (root, root / "repro", root / "src" / "repro"):
+        if cand.is_dir() and cand.name == "repro":
+            return cand
+    raise FileNotFoundError(
+        f"no `repro` package under {root} — pass the package dir, a dir "
+        "containing repro/, or a repo root containing src/repro")
+
+
+def display_path(path: Path) -> str:
+    """Path as printed in findings: cwd-relative when possible."""
+    try:
+        return os.path.relpath(path)
+    except ValueError:  # different drive (windows)
+        return str(path)
+
+
+def analyze(root: Path) -> list[Finding]:
+    """Run every rule over the tree at ``root`` and apply suppressions.
+
+    Returns ALL findings, suppressed ones flagged — callers gate on
+    ``[f for f in findings if not f.suppressed]``.
+    """
+    from repro.analysis import project  # late: avoids import cycle
+
+    pkg_root = locate_package_root(Path(root))
+    files = sorted(pkg_root.rglob("*.py"))
+    findings: list[Finding] = []
+    sources: dict[str, str] = {}
+    for path in files:
+        rel = path.relative_to(pkg_root).as_posix()
+        display = display_path(path)
+        sources[display] = path.read_text(encoding="utf-8")
+        findings.extend(check_source(sources[display], rel, display))
+    findings.extend(project.check_project(pkg_root))
+    return _apply_suppressions(findings, sources)
+
+
+def _apply_suppressions(findings: list[Finding],
+                        sources: dict[str, str]) -> list[Finding]:
+    supp = {display: rules.parse_suppressions(src)
+            for display, src in sources.items()}
+    used: set[tuple] = set()
+    out: list[Finding] = []
+    for f in findings:
+        ids = supp.get(f.path, {}).get(f.line, set())
+        if f.rule in ids:
+            out.append(dataclasses.replace(f, suppressed=True))
+            used.add((f.path, f.line, f.rule))
+        else:
+            out.append(f)
+    for display, per_line in supp.items():
+        for line in sorted(per_line):
+            for rule_id in sorted(per_line[line]):
+                if (display, line, rule_id) in used:
+                    continue
+                reason = ("unknown rule id"
+                          if rule_id not in rules.RULE_IDS
+                          else f"no {rule_id} finding on this line")
+                out.append(Finding(
+                    "stale-suppression", display, line, 1,
+                    f"stale `# repro: ignore[{rule_id}]`: {reason} — "
+                    "remove the suppression"))
+    return out

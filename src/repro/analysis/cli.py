@@ -1,0 +1,81 @@
+"""Command-line gate: ``python -m repro.analysis.cli src/repro``.
+
+Text output is one ``path:line:col: rule-id: message`` line per active
+finding (clean grep/editor jump-to-line format); ``--json`` emits the full
+machine-readable report including suppressed findings.  Exit status is
+nonzero iff any *unsuppressed* finding (stale suppressions included)
+exists — ci.sh runs this as its first leg, before any pip work, since the
+whole package is stdlib-only.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis import __version__, checker, rules
+
+
+def _list_rules() -> str:
+    width = max(len(r.id) for r in rules.RULES)
+    lines = [f"repro.analysis v{__version__} — rule catalog", ""]
+    for rule in rules.RULES:
+        lines.append(f"  {rule.id:<{width}}  {rule.summary}")
+        lines.append(f"  {'':<{width}}  protects: {rule.protects}")
+    lines.append("")
+    lines.append("suppress with `# repro: ignore[rule-id]` on the "
+                 "flagged line (stale suppressions are themselves "
+                 "findings)")
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.cli",
+        description="AST-based invariant checker for this repo "
+                    "(stdlib-only; see README 'Static analysis')")
+    parser.add_argument("paths", nargs="*", metavar="PATH",
+                        help="tree(s) to check — the repro package dir, "
+                             "or any dir containing repro/ or src/repro")
+    parser.add_argument("--json", action="store_true",
+                        help="machine-readable report (includes "
+                             "suppressed findings) on stdout")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule catalog and exit")
+    parser.add_argument("--version", action="version",
+                        version=f"repro.analysis {__version__}")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        print(_list_rules())
+        return 0
+    if not args.paths:
+        parser.error("at least one PATH is required (e.g. src/repro)")
+
+    findings: list[rules.Finding] = []
+    for path in args.paths:
+        findings.extend(checker.analyze(Path(path)))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    active = [f for f in findings if not f.suppressed]
+    suppressed = len(findings) - len(active)
+
+    if args.json:
+        print(json.dumps({
+            "version": __version__,
+            "paths": list(args.paths),
+            "active": len(active),
+            "suppressed": suppressed,
+            "findings": [f.to_json() for f in findings],
+        }, indent=2))
+    else:
+        for finding in active:
+            print(finding.render())
+        print(f"repro.analysis v{__version__}: {len(active)} finding(s), "
+              f"{suppressed} suppressed", file=sys.stderr)
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

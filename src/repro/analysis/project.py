@@ -1,0 +1,145 @@
+"""Cross-file repo-structure checks: rules that no single-module visitor
+can see (kernel package shape, kernel/ref/pricing kind agreement)."""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from repro.analysis.checker import (build_import_map, display_path,
+                                    resolve_dotted)
+from repro.analysis.rules import Finding
+
+#: Every kernel package ships this trio: the Pallas kernel, the pure-XLA
+#: reference the equivalence tests pin it against, and the lazy dispatch
+#: wrapper (ROADMAP "kernel dispatch order").
+KERNEL_TRIO = ("kernel.py", "ref.py", "ops.py")
+
+_DISPATCH_FN = "repro.compat.import_pallas_kernel"
+
+
+def check_project(pkg_root: Path) -> list[Finding]:
+    findings = _check_kernel_trio(pkg_root)
+    findings.extend(_check_fused_kinds(pkg_root))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# kernel-trio
+# ---------------------------------------------------------------------------
+
+def _check_kernel_trio(pkg_root: Path) -> list[Finding]:
+    kernels = pkg_root / "kernels"
+    if not kernels.is_dir():
+        return []
+    out: list[Finding] = []
+    for sub in sorted(p for p in kernels.iterdir() if p.is_dir()):
+        init = sub / "__init__.py"
+        if not init.exists():
+            continue  # not a kernel package (e.g. cache dirs)
+        for name in KERNEL_TRIO:
+            if not (sub / name).exists():
+                out.append(Finding(
+                    "kernel-trio", display_path(init), 1, 1,
+                    f"kernel package `kernels/{sub.name}` is missing "
+                    f"`{name}` — every kernel ships the kernel.py/ref.py/"
+                    "ops.py trio"))
+        ops = sub / "ops.py"
+        if ops.exists() and not _ops_uses_lazy_dispatch(ops):
+            out.append(Finding(
+                "kernel-trio", display_path(ops), 1, 1,
+                f"`kernels/{sub.name}/ops.py` does not dispatch through "
+                "`compat.import_pallas_kernel` — kernel modules must be "
+                "imported lazily so the backend probe stays deferred"))
+    return out
+
+
+def _ops_uses_lazy_dispatch(ops: Path) -> bool:
+    try:
+        tree = ast.parse(ops.read_text(encoding="utf-8"))
+    except SyntaxError:
+        return True  # parse-error finding already covers this file
+    package = "repro.kernels." + ops.parent.name
+    imports = build_import_map(tree, package)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and \
+                resolve_dotted(node.func, imports) == _DISPATCH_FN:
+            return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# fused-kind-exhaustiveness
+# ---------------------------------------------------------------------------
+
+def kind_literals(scope: ast.AST) -> set[str]:
+    """String literals compared against a ``.kind`` attribute anywhere in
+    ``scope`` — ``st.kind == "attn"``, ``s.kind != "act"``,
+    ``x.kind in ("norm", "ffn")`` all contribute."""
+    out: set[str] = set()
+    for node in ast.walk(scope):
+        if not isinstance(node, ast.Compare):
+            continue
+        sides = [node.left, *node.comparators]
+        if not any(isinstance(s, ast.Attribute) and s.attr == "kind"
+                   for s in sides):
+            continue
+        for side in sides:
+            if isinstance(side, ast.Constant) and \
+                    isinstance(side.value, str):
+                out.add(side.value)
+            elif isinstance(side, (ast.Tuple, ast.List, ast.Set)):
+                out.update(e.value for e in side.elts
+                           if isinstance(e, ast.Constant)
+                           and isinstance(e.value, str))
+    return out
+
+
+def _function_scope(tree: ast.AST, name: str) -> ast.AST | None:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    return None
+
+
+def _check_fused_kinds(pkg_root: Path) -> list[Finding]:
+    ref = pkg_root / "kernels" / "fused_plan" / "ref.py"
+    kernel = pkg_root / "kernels" / "fused_plan" / "kernel.py"
+    plan = pkg_root / "core" / "plan.py"
+    if not (ref.exists() and kernel.exists() and plan.exists()):
+        return []  # absent pieces are kernel-trio's problem, not ours
+
+    trees: dict[str, ast.AST] = {}
+    for path in (ref, kernel, plan):
+        try:
+            trees[str(path)] = ast.parse(path.read_text(encoding="utf-8"))
+        except SyntaxError:
+            return []  # parse-error findings already cover it
+
+    pricing = _function_scope(trees[str(plan)], "decode_stage_traffic")
+    if pricing is None:
+        return [Finding(
+            "fused-kind-exhaustiveness", display_path(plan), 1, 1,
+            "core/plan.py has no `decode_stage_traffic` — the per-kind "
+            "pricing contract the fused benchmarks gate on is gone")]
+
+    handled = {
+        ref: kind_literals(trees[str(ref)]),
+        kernel: kind_literals(trees[str(kernel)]),
+        plan: kind_literals(pricing),
+    }
+    vocabulary = set().union(*handled.values())
+    where = {ref: "kernels/fused_plan/ref.py",
+             kernel: "kernels/fused_plan/kernel.py",
+             plan: "core/plan.decode_stage_traffic"}
+    out: list[Finding] = []
+    for path, kinds in handled.items():
+        line = pricing.lineno if path is plan else 1
+        for missing in sorted(vocabulary - kinds):
+            out.append(Finding(
+                "fused-kind-exhaustiveness", display_path(path), line, 1,
+                f"FusedStep kind '{missing}' is in the fused vocabulary "
+                f"but not handled by {where[path]} — kernel, ref and "
+                "decode_stage_traffic pricing must agree on the kind "
+                "set"))
+    return out

@@ -1,0 +1,130 @@
+"""Rule framework: the catalog, :class:`Finding`, and suppressions.
+
+Every check in :mod:`repro.analysis.checker` / ``.project`` reports
+:class:`Finding`\\ s tagged with a rule id from :data:`RULES`.  A finding
+on a line carrying ``# repro: ignore[rule-id]`` is *suppressed* — still
+emitted (JSON shows ``"suppressed": true``) but not counted toward the
+exit code.  A suppression that matches no finding on its line is itself a
+finding (``stale-suppression``), so ignores cannot rot in place after the
+underlying violation is fixed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import io
+import re
+import tokenize
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One entry of the catalog: id, what it flags, what it protects."""
+
+    id: str
+    summary: str
+    protects: str
+
+
+#: The rule catalog. README's "Static analysis" table mirrors this; the
+#: CLI prints it via ``--list-rules``.
+RULES: tuple[Rule, ...] = (
+    Rule("compat-drift",
+         "drifted JAX API (shard_map / set_mesh / use_mesh / AxisType / "
+         "removed jax.tree_* aliases) spelled outside repro/compat.py, "
+         "aliased and from-imports included",
+         "JAX-floor portability: every drifted spelling is shimmed once, "
+         "in the compat layer"),
+    Rule("serving-clock",
+         "time.time / time.monotonic / time.perf_counter reachable from "
+         "repro/serving, aliasing included",
+         "injectable-clock serving: virtual-time trace replay and "
+         "deterministic fault harnesses break if wall time leaks in"),
+    Rule("bare-assert",
+         "assert statement in library code (tests are not scanned)",
+         "loud failures: asserts vanish under `python -O`; invariants "
+         "must raise ValueError with a diagnostic payload"),
+    Rule("import-time-jax",
+         "jax.jit / pallas_call / device-touching call executed at module "
+         "top level (decorated-def bodies are fine)",
+         "the lazy kernel-backend probe: importing repro modules must "
+         "never lock jax device state"),
+    Rule("kernel-trio",
+         "a kernels/<pkg> package missing kernel.py / ref.py / ops.py, or "
+         "an ops.py that does not dispatch via "
+         "compat.import_pallas_kernel",
+         "kernel/ref/ops discipline: every kernel has an XLA reference "
+         "and a lazy, probe-respecting dispatch point"),
+    Rule("cache-key-hazard",
+         "functools.lru_cache/cache on a function whose parameters look "
+         "model- or array-typed",
+         "process-lifetime caches keyed on hashable configs only — the "
+         "PR 5 Model-instance-pinning leak class"),
+    Rule("fused-kind-exhaustiveness",
+         "a FusedStep.kind handled by one of kernels/fused_plan/kernel.py"
+         ", kernels/fused_plan/ref.py or core/plan.decode_stage_traffic "
+         "but not the others",
+         "kernel/ref/pricing agreement: a step kind the kernel executes "
+         "must also be reference-checked and traffic-priced"),
+    Rule("stale-suppression",
+         "# repro: ignore[...] comment matching no finding on its line",
+         "suppressions stay honest: an ignore must point at a real, "
+         "current finding"),
+    Rule("parse-error",
+         "file failed to parse as Python",
+         "the other rules: an unparseable file is an unchecked file"),
+)
+
+RULE_IDS: frozenset[str] = frozenset(r.id for r in RULES)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One violation: rule id, location (1-indexed line/col), message."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    suppressed: bool = False
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule}: " \
+               f"{self.message}"
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message,
+                "suppressed": self.suppressed}
+
+
+#: The suppression marker inside a comment: ``ignore[...]`` after the
+#: ``repro:`` tag, one rule id or a comma list. (Spelled obliquely here so
+#: this comment is not itself a live suppression.)
+_SUPPRESS_RE = re.compile(r"repro:\s*ignore\[([A-Za-z0-9_\-, ]+)\]")
+
+
+def parse_suppressions(source: str) -> dict[int, set[str]]:
+    """Map line number -> rule ids suppressed on that line.
+
+    Reads real COMMENT tokens (not string literals), so documentation that
+    *mentions* the syntax cannot create phantom suppressions. Unknown rule
+    ids are kept — they can never match a finding, so they surface as
+    ``stale-suppression``.
+    """
+    out: dict[int, set[str]] = {}
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _SUPPRESS_RE.search(tok.string)
+            if m:
+                ids = {s.strip() for s in m.group(1).split(",") if s.strip()}
+                out.setdefault(tok.start[0], set()).update(ids)
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        # Unparseable source already yields a parse-error finding; there
+        # is nothing meaningful to suppress in it.
+        return {}
+    return out

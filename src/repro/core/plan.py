@@ -574,7 +574,10 @@ def ffn_leaves_apply(p: Params, x: jax.Array, activation: str) -> jax.Array:
     act = activation_fn(activation)
     n = p["wdp"].shape[0]
     b = x.shape[0]
-    assert b % n == 0, (b, n)
+    if b % n != 0:
+        raise ValueError(
+            f"ffn_leaves_apply: batch rows {b} not divisible by the "
+            f"packed mask count {n} — rows must be grouped mask-major")
     xg = x.reshape(n, b // n, *x.shape[1:])        # [N, B/N, S, D]
     if "wgp" in p:
         h = act(jnp.einsum("nbsd,ndk->nbsk", xg, p["wgp"])) * \
@@ -1399,6 +1402,13 @@ def decode_stage_traffic(spec: fused_ref.FusedDecodeSpec, rows: int,
             add("dense",
                 w=st.d_in * st.d_out + (st.d_out if st.shared_bias else 0),
                 fl=2 * rows * st.d_in * st.d_out)
+        elif st.kind == "act":
+            pass  # elementwise on the VMEM-resident state: no HBM traffic
+        else:
+            raise ValueError(
+                f"decode_stage_traffic: unpriced step kind {st.kind!r} — "
+                "a kind the kernels execute must also be traffic-priced "
+                "(extend this table alongside fused_plan kernel/ref)")
     if fused:
         act_el = rows * d + b * v + b
         launches = 1

@@ -45,7 +45,10 @@ def pipeline_forward(mesh: Mesh, stage_fn: Callable[[Params, jax.Array],
     """
     n_stages = mesh.shape["stage"]
     b = x.shape[0]
-    assert b % n_micro == 0, (b, n_micro)
+    if b % n_micro != 0:
+        raise ValueError(
+            f"pipeline_forward: batch {b} not divisible by n_micro "
+            f"{n_micro} — microbatching needs equal splits")
     micro = x.reshape(n_micro, b // n_micro, *x.shape[1:])
 
     def run(params, micro):

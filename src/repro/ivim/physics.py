@@ -40,13 +40,25 @@ CLINICAL_B_VALUES: tuple[float, ...] = (
 # 104-b-value dense research protocol — the size the paper's PEs support
 # ("each PE capable of processing voxels up to 128 elements ... a published
 # IVIM dataset with 104 b-values", §VI-A).
-DENSE_B_VALUES: tuple[float, ...] = tuple(
+
+
+def _validated_dense(values: tuple[float, ...]) -> tuple[float, ...]:
+    """Import-time guard on the dense protocol size (an ``assert`` here
+    would vanish under ``python -O`` and let a silently resized protocol
+    through to every PE-capacity assumption downstream)."""
+    if len(values) != 104:
+        raise ValueError(
+            f"dense IVIM protocol must carry 104 b-values (paper §VI-A "
+            f"PE sizing), got {len(values)}")
+    return values
+
+
+DENSE_B_VALUES: tuple[float, ...] = _validated_dense(tuple(
     float(b) for b in np.concatenate([
         np.repeat([0.0, 10.0, 20.0, 30.0, 50.0, 75.0, 100.0, 150.0, 250.0,
                    400.0, 600.0], 8),
         np.linspace(5.0, 80.0, 16),
-    ]))
-assert len(DENSE_B_VALUES) == 104
+    ])))
 
 
 @dataclasses.dataclass(frozen=True)

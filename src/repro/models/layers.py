@@ -137,7 +137,11 @@ def mrope_cos_sin(positions: jax.Array, rot_dim: int, theta: float,
                   sections: tuple[int, ...]) -> tuple[jax.Array, jax.Array]:
     """Qwen2-VL M-RoPE. positions [3, ...] (temporal/height/width streams);
     sections partition the rot_dim/2 frequency slots among the streams."""
-    assert sum(sections) == rot_dim // 2, (sections, rot_dim)
+    if sum(sections) != rot_dim // 2:
+        raise ValueError(
+            f"mrope sections {sections} must sum to rot_dim/2 = "
+            f"{rot_dim // 2} — each frequency slot belongs to exactly "
+            "one position stream")
     cos, sin = rope_cos_sin(positions, rot_dim, theta)  # [3, ..., half]
     parts_c, parts_s = [], []
     off = 0

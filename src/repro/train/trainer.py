@@ -82,7 +82,10 @@ def make_train_step(model: Model, optimizer: Optimizer,
             return loss, metrics, grads
 
         b = jax.tree.leaves(batch)[0].shape[0]
-        assert b % tcfg.grad_accum == 0, (b, tcfg.grad_accum)
+        if b % tcfg.grad_accum != 0:
+            raise ValueError(
+                f"grad_accum {tcfg.grad_accum} does not divide the "
+                f"global batch {b} — microbatches must be equal-sized")
         micro = jax.tree.map(
             lambda x: x.reshape(tcfg.grad_accum, b // tcfg.grad_accum,
                                 *x.shape[1:]), batch)

@@ -1,0 +1,7 @@
+"""Fixture: the loud-ValueError form."""
+
+
+def positive(x):
+    if x <= 0:
+        raise ValueError(f"positive() needs x > 0, got {x}")
+    return x

@@ -1,0 +1,6 @@
+"""Fixture: a bare assert in library code."""
+
+
+def positive(x):
+    assert x > 0, x
+    return x

@@ -1,0 +1,8 @@
+"""Fixture: cache keyed on the hashable config, never the model."""
+
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def step_fns(cfg, fused):
+    return (cfg, fused)

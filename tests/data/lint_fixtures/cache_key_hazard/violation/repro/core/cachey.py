@@ -1,0 +1,8 @@
+"""Fixture: the PR 5 leak class — lru_cache keyed on a Model instance."""
+
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def step_fns(model, fused):
+    return (model, fused)

@@ -1,0 +1,12 @@
+"""Fixture: the sanctioned spelling — everything through repro.compat."""
+
+from repro import compat
+
+
+def wrap(fn, mesh, specs):
+    return compat.shard_map(fn, mesh=mesh, in_specs=specs,
+                            out_specs=specs)
+
+
+def identity_leaves(tree):
+    return compat.tree_map(lambda x: x, tree)

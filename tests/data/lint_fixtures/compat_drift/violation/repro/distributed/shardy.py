@@ -1,0 +1,13 @@
+"""Fixture: drifted JAX spellings the old grep could not see (aliased
+module import + from-import)."""
+
+import jax.experimental.shard_map as smap
+from jax import tree_map
+
+
+def wrap(fn, mesh, specs):
+    return smap.shard_map(fn, mesh=mesh, in_specs=specs, out_specs=specs)
+
+
+def identity_leaves(tree):
+    return tree_map(lambda x: x, tree)

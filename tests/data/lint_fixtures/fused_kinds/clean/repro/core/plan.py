@@ -1,0 +1,12 @@
+def decode_stage_traffic(spec):
+    out = {}
+    for st in spec.steps:
+        if st.kind == "norm":
+            out["norm"] = 1
+        elif st.kind == "attn":
+            out["attn"] = 2
+        elif st.kind == "ffn":
+            out["ffn"] = 3
+        else:
+            raise ValueError(st.kind)
+    return out

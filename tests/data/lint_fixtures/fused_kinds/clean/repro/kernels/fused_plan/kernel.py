@@ -1,0 +1,6 @@
+def run_kernel(step, state):
+    if step.kind in ("norm", "attn"):
+        return state
+    if step.kind == "ffn":
+        return state * 2
+    raise ValueError(step.kind)

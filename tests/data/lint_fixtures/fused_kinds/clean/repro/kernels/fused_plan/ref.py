@@ -1,0 +1,11 @@
+"""Fixture: kernel, ref and pricing agree on {norm, attn, ffn}."""
+
+
+def run_ref(step, state):
+    if step.kind == "norm":
+        return state
+    if step.kind == "attn":
+        return state + 1
+    if step.kind == "ffn":
+        return state * 2
+    raise ValueError(step.kind)

@@ -1,0 +1,13 @@
+"""Fixture: pricing forgot ffn."""
+
+
+def decode_stage_traffic(spec):
+    out = {}
+    for st in spec.steps:
+        if st.kind == "norm":
+            out["norm"] = 1
+        elif st.kind == "attn":
+            out["attn"] = 2
+        else:
+            raise ValueError(st.kind)
+    return out

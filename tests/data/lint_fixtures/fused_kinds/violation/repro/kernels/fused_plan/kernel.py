@@ -1,0 +1,7 @@
+"""Fixture: the kernel forgot attn and ffn."""
+
+
+def run_kernel(step, state):
+    if step.kind == "norm":
+        return state
+    raise ValueError(step.kind)

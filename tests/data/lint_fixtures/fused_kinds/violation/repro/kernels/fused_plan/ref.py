@@ -1,0 +1,11 @@
+"""Fixture: the reference handles the full kind vocabulary."""
+
+
+def run_ref(step, state):
+    if step.kind == "norm":
+        return state
+    if step.kind == "attn":
+        return state + 1
+    if step.kind == "ffn":
+        return state * 2
+    raise ValueError(step.kind)

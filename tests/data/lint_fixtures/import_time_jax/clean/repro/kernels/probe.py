@@ -1,0 +1,15 @@
+"""Fixture: the blessed lazy patterns — partial-jit decorator and
+probe-inside-function."""
+
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def step(x, n):
+    return x * n
+
+
+def backend():
+    return jax.default_backend()

@@ -1,0 +1,10 @@
+"""Fixture: device probing and jit at import time."""
+
+import jax
+
+BACKEND = jax.default_backend()
+
+
+@jax.jit
+def step(x):
+    return x + 1

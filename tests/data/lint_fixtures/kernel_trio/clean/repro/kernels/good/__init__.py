@@ -1,0 +1,1 @@
+"""Fixture kernel package with the full trio and lazy dispatch."""

@@ -1,0 +1,2 @@
+def run_ref(x):
+    return x

@@ -1,0 +1,1 @@
+"""Fixture kernel package missing ref.py and ops.py."""

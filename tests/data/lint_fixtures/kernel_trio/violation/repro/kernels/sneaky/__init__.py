@@ -1,0 +1,1 @@
+"""Fixture kernel package whose ops.py imports the kernel eagerly."""

@@ -1,0 +1,5 @@
+from repro.kernels.sneaky import kernel as _kernel
+
+
+def op(x):
+    return _kernel.run(x)

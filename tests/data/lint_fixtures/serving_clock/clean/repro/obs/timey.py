@@ -1,0 +1,8 @@
+"""Fixture: time.* OUTSIDE serving/ is legal (this is where the one
+sanctioned clock lives)."""
+
+import time
+
+
+def wall():
+    return time.monotonic()

@@ -1,0 +1,7 @@
+"""Fixture: serving takes time only from the injectable clock."""
+
+from repro.obs.trace import default_clock
+
+
+def now(clock=default_clock):
+    return clock()

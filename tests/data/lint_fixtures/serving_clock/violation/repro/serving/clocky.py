@@ -1,0 +1,12 @@
+"""Fixture: wall clocks on the serving path, aliased both ways."""
+
+import time as t
+from time import monotonic
+
+
+def now():
+    return monotonic()
+
+
+def elapsed(start):
+    return t.perf_counter() - start

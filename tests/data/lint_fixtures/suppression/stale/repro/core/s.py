@@ -1,0 +1,5 @@
+"""Fixture: a suppression with nothing to suppress — itself a finding."""
+
+
+def positive(x):
+    return x  # repro: ignore[bare-assert]

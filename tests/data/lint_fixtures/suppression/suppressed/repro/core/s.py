@@ -1,0 +1,7 @@
+"""Fixture: a suppressed bare assert — JSON shows it, exit code ignores
+it."""
+
+
+def positive(x):
+    assert x > 0, x  # repro: ignore[bare-assert]
+    return x

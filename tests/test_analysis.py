@@ -1,0 +1,205 @@
+"""repro.analysis: the AST invariant checker that replaced the ci.sh
+greps.
+
+Each rule is pinned by a golden fixture pair under
+tests/data/lint_fixtures/<rule>/{violation,clean} — a violating mini-tree
+that must produce the rule's finding (and a nonzero CLI exit), and a
+clean mini-tree that must produce no findings at all.  The
+aliased-import cases the old greps could not see (``from time import
+monotonic``, ``import jax.experimental.shard_map as smap``) are asserted
+explicitly, and the final check runs the whole checker over the real
+``src/repro`` tree — the live replacement for the deleted grep gates.
+"""
+
+import json
+import os
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import __version__, checker, cli, rules
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "data" / "lint_fixtures"
+
+
+def _analyze(tree: Path):
+    return checker.analyze(tree)
+
+
+def _rules_of(findings, active_only=True):
+    return {f.rule for f in findings if not (active_only and f.suppressed)}
+
+
+# ---------------------------------------------------------------------------
+# golden fixture corpus: one violating + one clean snippet per rule
+# ---------------------------------------------------------------------------
+
+RULE_FIXTURES = [
+    ("compat-drift", "compat_drift"),
+    ("serving-clock", "serving_clock"),
+    ("bare-assert", "bare_assert"),
+    ("import-time-jax", "import_time_jax"),
+    ("cache-key-hazard", "cache_key_hazard"),
+    ("kernel-trio", "kernel_trio"),
+    ("fused-kind-exhaustiveness", "fused_kinds"),
+]
+
+
+@pytest.mark.parametrize("rule_id,fixture", RULE_FIXTURES)
+def test_violation_fixture_flags_rule(rule_id, fixture):
+    findings = _analyze(FIXTURES / fixture / "violation")
+    assert rule_id in _rules_of(findings), findings
+    # the violation tree violates ONLY its target rule
+    assert _rules_of(findings) == {rule_id}, findings
+
+
+@pytest.mark.parametrize("rule_id,fixture", RULE_FIXTURES)
+def test_clean_fixture_is_silent(rule_id, fixture):
+    findings = _analyze(FIXTURES / fixture / "clean")
+    assert findings == [], findings
+
+
+@pytest.mark.parametrize("rule_id,fixture", RULE_FIXTURES)
+def test_cli_exit_codes(rule_id, fixture, capsys):
+    assert cli.main([str(FIXTURES / fixture / "violation")]) == 1
+    out = capsys.readouterr().out
+    assert rule_id in out
+    assert cli.main([str(FIXTURES / fixture / "clean")]) == 0
+
+
+# ---------------------------------------------------------------------------
+# the exact aliased spellings the deleted ci.sh greps missed
+# ---------------------------------------------------------------------------
+
+def test_aliased_from_time_import_caught():
+    src = "from time import monotonic\n\n\ndef f():\n    return monotonic()\n"
+    findings = checker.check_source(src, "serving/x.py", "x.py")
+    assert {f.rule for f in findings} == {"serving-clock"}
+    assert len(findings) == 2  # the import AND the call site
+    # ...and the same source outside serving/ is legal:
+    assert checker.check_source(src, "obs/x.py", "x.py") == []
+
+
+def test_aliased_shard_map_module_import_caught():
+    src = ("import jax.experimental.shard_map as smap\n\n\n"
+           "def f(fn):\n    return smap.shard_map(fn)\n")
+    findings = checker.check_source(src, "distributed/x.py", "x.py")
+    assert {f.rule for f in findings} == {"compat-drift"}
+    assert len(findings) == 2  # the import AND the attribute use
+    # compat.py itself is the one place allowed to spell these:
+    assert checker.check_source(src, "compat.py", "compat.py") == []
+
+
+def test_aliased_time_module_caught():
+    src = ("import time as t\n\n\ndef f(s):\n"
+           "    return t.perf_counter() - s\n")
+    findings = checker.check_source(src, "serving/x.py", "x.py")
+    assert _rules_of(findings) == {"serving-clock"}
+
+
+def test_stable_tree_aliases_stay_legal():
+    src = ("import jax\n\n\ndef f(tree):\n"
+           "    return jax.tree.map(lambda x: x, tree), "
+           "jax.tree_util.tree_leaves(tree)\n")
+    assert checker.check_source(src, "core/x.py", "x.py") == []
+
+
+def test_partial_jit_decorator_stays_legal():
+    src = ("import functools\n\nimport jax\n\n\n"
+           "@functools.partial(jax.jit, static_argnames=('n',))\n"
+           "def f(x, n):\n    return x * n\n")
+    assert checker.check_source(src, "kernels/x.py", "x.py") == []
+
+
+# ---------------------------------------------------------------------------
+# suppression mechanism
+# ---------------------------------------------------------------------------
+
+def test_suppressed_finding_shows_in_json_and_exits_zero(capsys):
+    tree = FIXTURES / "suppression" / "suppressed"
+    findings = _analyze(tree)
+    assert [f.rule for f in findings] == ["bare-assert"]
+    assert findings[0].suppressed
+
+    assert cli.main([str(tree), "--json"]) == 0
+    report = json.loads(capsys.readouterr().out)
+    assert report["version"] == __version__
+    assert report["active"] == 0 and report["suppressed"] == 1
+    assert report["findings"][0]["rule"] == "bare-assert"
+    assert report["findings"][0]["suppressed"] is True
+
+
+def test_stale_suppression_is_a_finding(capsys):
+    tree = FIXTURES / "suppression" / "stale"
+    findings = _analyze(tree)
+    assert _rules_of(findings) == {"stale-suppression"}
+    assert cli.main([str(tree)]) == 1
+    assert "stale" in capsys.readouterr().out
+
+
+def test_unknown_rule_id_suppression_is_stale():
+    src = "X = 1  # repro: ignore[no-such-rule]\n"
+    supp = rules.parse_suppressions(src)
+    assert supp == {1: {"no-such-rule"}}
+    findings = checker._apply_suppressions([], {"x.py": src})
+    assert [f.rule for f in findings] == ["stale-suppression"]
+    assert "unknown rule id" in findings[0].message
+
+
+def test_suppression_in_string_literal_is_inert():
+    src = 'DOC = "suppress with # repro: ignore[bare-assert]"\n'
+    assert rules.parse_suppressions(src) == {}
+
+
+# ---------------------------------------------------------------------------
+# framework details
+# ---------------------------------------------------------------------------
+
+def test_parse_error_is_a_finding():
+    findings = checker.check_source("def f(:\n", "core/x.py", "x.py")
+    assert [f.rule for f in findings] == ["parse-error"]
+
+
+def test_rule_catalog_is_consistent():
+    ids = [r.id for r in rules.RULES]
+    assert len(ids) == len(set(ids))
+    assert "stale-suppression" in rules.RULE_IDS
+    for fid, _ in RULE_FIXTURES:
+        assert fid in rules.RULE_IDS
+
+
+def test_locate_package_root_variants(tmp_path):
+    pkg = tmp_path / "src" / "repro"
+    pkg.mkdir(parents=True)
+    assert checker.locate_package_root(tmp_path) == pkg
+    assert checker.locate_package_root(tmp_path / "src") == pkg
+    assert checker.locate_package_root(pkg) == pkg
+    with pytest.raises(FileNotFoundError):
+        checker.locate_package_root(tmp_path / "nowhere")
+
+
+def test_analysis_package_is_stdlib_only():
+    """The ci.sh first leg runs before pip installs — importing the
+    checker must never pull in jax/numpy."""
+    import subprocess
+    import sys
+    code = ("import sys\n"
+            "import repro.analysis.cli, repro.analysis.checker, "
+            "repro.analysis.project\n"
+            "bad = [m for m in ('jax', 'numpy') if m in sys.modules]\n"
+            "assert not bad, bad\n")
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# the live gate: the real tree must be clean
+# ---------------------------------------------------------------------------
+
+def test_real_tree_is_clean():
+    findings = [f for f in _analyze(REPO / "src" / "repro")
+                if not f.suppressed]
+    assert findings == [], "\n".join(f.render() for f in findings)

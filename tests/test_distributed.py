@@ -422,3 +422,15 @@ def test_straggler_escalation_does_not_latch():
     # recovery resets the streak; a single later straggle doesn't re-fire
     mon.report(11, 5.0)
     assert not mon.should_escalate
+
+
+def test_pipeline_forward_rejects_ragged_microbatch():
+    """b % n_micro != 0 raises a loud ValueError before any collective
+    (was a bare assert; single-device mesh suffices — the check precedes
+    the shard_map)."""
+    from repro.distributed import pipeline
+    mesh = jax.make_mesh((1,), ("stage",))
+    ws = jnp.zeros((1, 4, 4))
+    x = jnp.zeros((3, 4))
+    with pytest.raises(ValueError, match="not divisible by n_micro"):
+        pipeline.pipeline_forward(mesh, lambda w, h: h, ws, x, n_micro=2)

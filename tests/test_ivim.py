@@ -96,3 +96,12 @@ def test_requirement_checker():
     bad = {5.0: 0.1, 15.0: 0.3, 50.0: 0.5}
     assert unc_lib.check_requirements(req, good, good).satisfied
     assert not unc_lib.check_requirements(req, bad, good).satisfied
+
+
+def test_dense_protocol_import_guard():
+    """The 104-b-value protocol check is a ValueError guard that survives
+    python -O (was a module-level bare assert)."""
+    assert len(P.DENSE_B_VALUES) == 104
+    assert P._validated_dense(P.DENSE_B_VALUES) is P.DENSE_B_VALUES
+    with pytest.raises(ValueError, match="104 b-values"):
+        P._validated_dense(P.DENSE_B_VALUES[:-1])

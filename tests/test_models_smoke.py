@@ -246,3 +246,11 @@ def test_local_attention_rolling_cache_slot_invariant():
                 assert slot == p % smax, (s, slot, p)
         kept = sorted(p for p in kpos if p >= 0)
         assert kept == list(range(max(0, s - smax), s))
+
+
+def test_mrope_sections_must_partition_rot_dim():
+    """Bad M-RoPE sections raise a loud ValueError (was a bare assert)."""
+    from repro.models import layers
+    pos = jnp.zeros((3, 4))
+    with pytest.raises(ValueError, match="must sum to rot_dim/2"):
+        layers.mrope_cos_sin(pos, rot_dim=8, theta=1e4, sections=(1, 1))

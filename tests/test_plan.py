@@ -212,3 +212,12 @@ def test_engine_predict_packed_matches_predict():
     mean_c, std_c = engine.predict_packed(plan, x, chunk=4, backend="xla")
     _close(mean_c, want_mean)
     _close(std_c, want_std)
+
+
+def test_ffn_leaves_apply_rejects_ragged_mask_groups():
+    """b % n != 0 raises a loud ValueError (was a bare assert — stripped
+    under python -O — until the repro.analysis bare-assert rule)."""
+    leaves = {"wup": jnp.ones((3, 4, 2)), "wdp": jnp.ones((3, 2, 4))}
+    x = jnp.ones((4, 2, 4))  # 4 rows over 3 masks: not mask-major
+    with pytest.raises(ValueError, match="not divisible by the packed"):
+        plan_lib.ffn_leaves_apply(leaves, x, "gelu_mlp")

@@ -98,3 +98,17 @@ def test_serve_uncertain_requires_bayesian():
     import pytest
     with pytest.raises(ValueError):
         serve_uncertain(model, params, toks)
+
+
+def test_grad_accum_must_divide_batch():
+    """grad_accum not dividing the global batch raises a loud ValueError
+    at trace time (was a bare assert)."""
+    import pytest
+    cfg, model, opt = _small()
+    data = LMDataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                        global_batch=8)
+    batch = lm_batch(data, 0)
+    s0 = train_state_init(model, opt, jax.random.PRNGKey(0))
+    step = make_train_step(model, opt, TrainConfig(grad_accum=3))
+    with pytest.raises(ValueError, match="does not divide"):
+        step(s0, batch)
